@@ -1,0 +1,44 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure family; each prints CSV rows
+``name,us_per_call,derived``. ``--only`` selects a subset.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import collision_sweep, design_opt, locality, roofline, traffic
+
+SUITES = {
+    "traffic": traffic.run,            # paper: weight-sharing traffic table
+    "locality": locality.run,          # paper: Q/R temporal locality figures
+    "design_opt": design_opt.run,      # paper: design-optimization ladder
+    "collision_sweep": collision_sweep.run,  # paper: shortcoming analyses
+    "roofline": roofline.run,          # deliverable (g)
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for n in names:
+        t0 = time.time()
+        try:
+            SUITES[n]()
+            print(f"# suite {n} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # keep the harness going; failures are visible
+            import traceback
+
+            traceback.print_exc()
+            print(f"{n}/SUITE_FAILED,0.00,{type(e).__name__}: {e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

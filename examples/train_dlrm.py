@@ -1,0 +1,86 @@
+"""End-to-end driver: train a DLRM whose embedding layer is the paper's
+weight-sharing operator, for a few hundred steps, with checkpoints.
+
+The configuration serves a ~330M-parameter *logical* embedding capacity
+(26 tables x 200K rows x 64 dims) from ~5.3M physical parameters via QR
+(collision 64) — exactly the memory-capacity story the paper targets — and
+trains it against synthetic long-tail (Zipf) CTR traces with planted
+structure, reporting loss + AUC.
+
+Run:  PYTHONPATH=src python examples/train_dlrm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.base import DLRMConfig
+from repro.data.synthetic import dlrm_planted_batch, dlrm_truth
+from repro.models import dlrm
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import make_dlrm_loss, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_dlrm_ckpt")
+    ap.add_argument("--dense-baseline", action="store_true",
+                    help="train the uncompressed table instead (paper baseline)")
+    args = ap.parse_args()
+
+    cfg = DLRMConfig(
+        name="dlrm-qr-example",
+        num_tables=26,
+        vocab_per_table=200_000,
+        dim=64,
+        pooling=8,
+        bottom_mlp=(256, 128, 64),
+        top_mlp=(256, 128, 1),
+        embedding_kind="dense" if args.dense_baseline else "qr",
+        qr_collision=64,
+    )
+    logical = cfg.num_tables * cfg.vocab_per_table * cfg.dim
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+    physical = sum(int(x.size) for x in jax.tree.leaves(params["tables"]))
+    print(f"logical embedding params {logical/1e6:.0f}M -> physical "
+          f"{physical/1e6:.2f}M ({logical/max(physical,1):.0f}x)")
+
+    opt_cfg = opt_mod.OptConfig(lr=2e-3, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(make_train_step(make_dlrm_loss(cfg), opt_cfg))
+    opt = opt_mod.init(params)
+
+    start = 0
+    latest = ckpt.latest_step(args.ckpt_dir)
+    if latest:
+        (params, opt), extra = ckpt.restore(
+            args.ckpt_dir, latest, (params, opt))
+        start = latest
+        print(f"[resume] from step {start}")
+
+    truth = dlrm_truth(cfg)            # planted structure -> learnable AUC
+    t0 = time.time()
+    for s in range(start, args.steps):
+        batch = dlrm_planted_batch(cfg, truth, args.batch, seed=0, step=s)
+        params, opt, m = step(params, opt, batch)
+        if (s + 1) % 25 == 0:
+            print(f"step {s+1:4d}  loss {float(m['loss']):.4f}  "
+                  f"({(time.time()-t0)/(s-start+1):.2f}s/step)")
+        if (s + 1) % 100 == 0:
+            ckpt.save(args.ckpt_dir, s + 1, (params, opt))
+            ckpt.prune(args.ckpt_dir, keep=2)
+
+    # evaluation on held-out traces
+    test = dlrm_planted_batch(cfg, truth, 4096, seed=123, step=10_000)
+    logits = dlrm.forward_dlrm(params, test["dense"], test["idx"], cfg)
+    print(f"final: loss {float(dlrm.bce_loss(logits, test['labels'])):.4f}  "
+          f"auc {float(dlrm.auc(logits, test['labels'])):.4f}")
+
+
+if __name__ == "__main__":
+    main()

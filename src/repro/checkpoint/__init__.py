@@ -1,0 +1,2 @@
+from repro.checkpoint import checkpointer  # noqa: F401
+from repro.checkpoint.checkpointer import latest_step, restore, save  # noqa: F401

@@ -1,0 +1,31 @@
+"""dlrm-qr — the paper's own model: DLRM with weight-sharing (QR) embedding
+tables. This is the faithful-reproduction target for every paper benchmark."""
+
+import dataclasses
+
+from repro.configs.base import DLRMConfig
+
+CONFIG = DLRMConfig(
+    name="dlrm-qr",
+    num_tables=26,
+    vocab_per_table=2_000_000,
+    dim=128,                       # 512 B rows at fp32 — the paper's largest sweep point
+    pooling=32,
+    embedding_kind="qr",
+    qr_collision=64,
+)
+
+# The dense (no weight-sharing) baseline the paper compares against.
+DENSE_BASELINE = dataclasses.replace(CONFIG, name="dlrm-dense", embedding_kind="dense")
+
+SMOKE = DLRMConfig(
+    name="dlrm-qr-smoke",
+    num_tables=4,
+    vocab_per_table=4096,
+    dim=32,
+    pooling=8,
+    bottom_mlp=(64, 32),
+    top_mlp=(64, 1),
+    embedding_kind="qr",
+    qr_collision=8,
+)

@@ -1,0 +1,214 @@
+"""Architecture registry: --arch ids -> configs, model bindings, shape cells.
+
+The single source of truth for the 10 assigned architectures (+ the paper's
+own DLRM), their family bindings (init / train-forward / serve family), the
+shape grid, skip rules, and the ShapeDtypeStruct ``input_specs`` used by the
+dry-run and benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchBinding:
+    arch_id: str
+    module: str                    # repro.configs.<module> holding CONFIG/SMOKE
+    kind: str                      # transformer | zamba2 | xlstm | whisper | pixtral
+    sub_quadratic: bool            # eligible for long_500k
+    has_decode: bool = True
+
+    @property
+    def config(self) -> ModelConfig:
+        return importlib.import_module(f"repro.configs.{self.module}").CONFIG
+
+    @property
+    def smoke(self) -> ModelConfig:
+        return importlib.import_module(f"repro.configs.{self.module}").SMOKE
+
+
+ARCHS: dict[str, ArchBinding] = {
+    b.arch_id: b
+    for b in [
+        ArchBinding("qwen2-1.5b", "qwen2_1_5b", "transformer", False),
+        ArchBinding("granite-34b", "granite_34b", "transformer", False),
+        ArchBinding("chatglm3-6b", "chatglm3_6b", "transformer", False),
+        ArchBinding("minitron-4b", "minitron_4b", "transformer", False),
+        ArchBinding("zamba2-7b", "zamba2_7b", "zamba2", True),
+        ArchBinding("whisper-large-v3", "whisper_large_v3", "whisper", False),
+        ArchBinding("pixtral-12b", "pixtral_12b", "pixtral", False),
+        ArchBinding("granite-moe-3b-a800m", "granite_moe_3b_a800m", "transformer", False),
+        ArchBinding("qwen3-moe-235b-a22b", "qwen3_moe_235b_a22b", "transformer", False),
+        ArchBinding("xlstm-125m", "xlstm_125m", "xlstm", True),
+    ]
+}
+
+
+def get(arch_id: str) -> ArchBinding:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+# ---------------------------------------------------------------------------
+# shape grid + skip rules
+# ---------------------------------------------------------------------------
+
+def shape_status(binding: ArchBinding, shape: ShapeConfig) -> str:
+    """'run' or a skip reason (recorded, per the assignment, in DESIGN.md)."""
+    if shape.kind == "decode" and not binding.has_decode:
+        return "skip: encoder-only, no decode step"
+    if shape.name.startswith("long_") and not binding.sub_quadratic:
+        return "skip: pure full-attention arch; long_500k needs sub-quadratic"
+    return "run"
+
+
+def cells(include_skipped: bool = False):
+    """Iterate (binding, shape, status) over the 10 x 4 assigned grid."""
+    for binding in ARCHS.values():
+        for shape in LM_SHAPES:
+            status = shape_status(binding, shape)
+            if status == "run" or include_skipped:
+                yield binding, shape, status
+
+
+# ---------------------------------------------------------------------------
+# model bindings
+# ---------------------------------------------------------------------------
+
+def init_fn(binding: ArchBinding) -> Callable:
+    """(key, cfg) -> (params, axes)."""
+    kind = binding.kind
+    if kind == "transformer":
+        from repro.models import transformer as T
+
+        return T.init_lm
+    if kind == "zamba2":
+        from repro.models import zamba2 as Z
+
+        return Z.init_zamba2
+    if kind == "xlstm":
+        from repro.models import xlstm as X
+
+        return X.init_xlstm
+    if kind == "whisper":
+        from repro.models import whisper as W
+
+        return W.init_whisper
+    if kind == "pixtral":
+        from repro.models import pixtral as P
+
+        return P.init_pixtral
+    raise ValueError(kind)
+
+
+def train_loss_fn(binding: ArchBinding, cfg: ModelConfig) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics) for this family."""
+    from repro.train import train_step as TS
+
+    kind = binding.kind
+    if kind == "transformer":
+        from repro.models import transformer as T
+
+        return TS.make_lm_loss(T.forward_train, cfg)
+    if kind == "zamba2":
+        from repro.models import zamba2 as Z
+
+        return TS.make_lm_loss(
+            lambda p, t, c: Z.forward_zamba2(p, t, c)[0], cfg
+        )
+    if kind == "xlstm":
+        from repro.models import xlstm as X
+
+        return TS.make_lm_loss(lambda p, t, c: X.forward_xlstm(p, t, c)[0], cfg)
+    if kind == "whisper":
+        from repro.models import whisper as W
+
+        return TS.make_prefixed_lm_loss(W.forward_train, cfg, "frames")
+    if kind == "pixtral":
+        from repro.models import pixtral as P
+
+        return TS.make_prefixed_lm_loss(P.forward_train, cfg, "patches")
+    raise ValueError(kind)
+
+
+def make_batch_fn(binding: ArchBinding, cfg: ModelConfig) -> Callable:
+    """(batch, seq, seed=, step=) -> concrete batch dict (for smoke/examples)."""
+    from repro.data import synthetic as syn
+
+    kind = binding.kind
+    if kind == "whisper":
+        return lambda b, s, **kw: syn.whisper_batch(cfg, b, s, **kw)
+    if kind == "pixtral":
+        return lambda b, s, **kw: syn.pixtral_batch(cfg, b, s, **kw)
+    return lambda b, s, **kw: syn.lm_batch(cfg, b, s, **kw)
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (dry-run: ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(binding: ArchBinding, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract batch for train/prefill lowering."""
+    specs: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    }
+    if binding.kind == "whisper":
+        from repro.models.whisper import N_AUDIO
+
+        specs["frames"] = jax.ShapeDtypeStruct((batch, N_AUDIO, cfg.d_model), jnp.float32)
+    if binding.kind == "pixtral":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+    return specs
+
+
+def cache_specs(binding: ArchBinding, cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract KV/SSM cache for decode lowering (shapes only)."""
+    from repro.train.serve_step import serve_family
+
+    fam = serve_family(binding.kind)
+    return jax.eval_shape(lambda: fam.make_cache(cfg, batch, max_len))
+
+
+def abstract_params(binding: ArchBinding, cfg: ModelConfig):
+    """(params ShapeDtypeStructs, logical axes tree) without allocating."""
+    init = init_fn(binding)
+    params = jax.eval_shape(lambda k: init(k, cfg)[0], jax.random.PRNGKey(0))
+    # axes trees contain python strings — build them from a tiny same-family
+    # config (structure is depth-independent for scan-stacked models only if
+    # layer count matches, so use the real cfg; init is cheap at eval_shape
+    # level but axes need a real call on a reduced config with SAME structure).
+    axes = _axes_for(binding, cfg)
+    return params, axes
+
+
+def _axes_for(binding: ArchBinding, cfg: ModelConfig):
+    """Logical-axes tree. Computed on a reduced config with identical tree
+    structure (same layer topology flags), then reused for the full config —
+    axes depend only on structure, not sizes."""
+    small = cfg.replace(
+        d_model=64,
+        num_heads=4,
+        kv_heads=min(cfg.kv_heads, 4) if cfg.kv_heads > 1 else 1,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        num_experts=min(cfg.num_experts, 8) if cfg.num_experts else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else cfg.ssm_head_dim,
+        ssm_groups=1 if cfg.ssm_state else cfg.ssm_groups,
+        num_patches=8 if cfg.num_patches else 0,
+        qr_collision=min(cfg.qr_collision, 8),
+    )
+    _, axes = init_fn(binding)(jax.random.PRNGKey(0), small)
+    return axes

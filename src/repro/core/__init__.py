@@ -1,0 +1,22 @@
+"""repro.core — the paper's contribution: weight-sharing embedding acceleration.
+
+Public surface:
+
+* ``hashing``            — QR / k-ary hash index math
+* ``qr_embedding``       — weight-sharing embedding modules (dense/hashed/qr)
+* ``embedding_bag``      — multi-table gather-and-reduce (DLRM semantics)
+* ``placement``          — hot/cold tier planning (the allocation strategy)
+* ``sharded_embedding``  — two-level shard_map GnR (the PIM scheme on a mesh)
+* ``overlap``            — compute/ICI overlap helpers
+"""
+
+from repro.core import (  # noqa: F401
+    embedding_bag,
+    hashing,
+    overlap,
+    placement,
+    qr_embedding,
+    sharded_embedding,
+)
+from repro.core.embedding_bag import BagConfig  # noqa: F401
+from repro.core.qr_embedding import EmbeddingConfig  # noqa: F401

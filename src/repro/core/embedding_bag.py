@@ -1,0 +1,106 @@
+"""Multi-table gather-and-reduce (GnR) — the DLRM embedding-bag operator.
+
+A recommendation batch carries, per sample and per sparse feature (table), a
+multi-hot bag of ``pooling`` logical indices. GnR gathers each row and reduces
+(sum / mean / weighted-sum) into one pooled vector per (sample, table).
+
+This module gives the *semantic* (pure-jnp) implementation used as oracle and
+CPU path; the TPU hot path is ``repro.kernels.gnr_bag`` (fused with the QR
+reconstruction so each bag touches DRAM once per Q row and never for R rows —
+the paper's LUT effect).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qr_embedding
+from repro.core.qr_embedding import EmbeddingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BagConfig:
+    """One sparse feature's table + pooling semantics."""
+
+    emb: EmbeddingConfig
+    pooling: int = 32                 # indices per bag (multi-hot degree)
+    combiner: str = "sum"             # sum | mean
+
+
+def init_tables(key: jax.Array, bags: Sequence[BagConfig]) -> list[dict]:
+    keys = jax.random.split(key, len(bags))
+    return [qr_embedding.init(k, b.emb) for k, b in zip(keys, bags)]
+
+
+def table_axes(bags: Sequence[BagConfig]) -> list[dict]:
+    return [qr_embedding.param_axes(b.emb) for b in bags]
+
+
+def bag_lookup(
+    params: dict, idx: jax.Array, bag: BagConfig, weights: jax.Array | None = None
+) -> jax.Array:
+    """Pooled lookup for one table. ``idx``: (batch, pooling) -> (batch, dim).
+
+    For QR-add tables the reduction is pushed *through* the reconstruction:
+    ``Σ_k (Q[q_k] + R[r_k]) = Σ_k Q[q_k] + Σ_k R[r_k]`` — associativity is what
+    lets the sharded/PIM execution reduce Q and R contributions independently.
+    """
+    emb = bag.emb
+    if emb.kind == "qr" and emb.reconstruction == "add" and weights is None:
+        from repro.core import hashing
+
+        q_idx, r_idx = hashing.qr_decompose(idx, emb.collision)
+        q = params["q"].astype(emb.compute_dtype)[q_idx].sum(axis=-2)
+        r = params["r"].astype(emb.compute_dtype)[r_idx].sum(axis=-2)
+        pooled = q + r
+    else:
+        vecs = qr_embedding.lookup(params, idx, emb)  # (batch, pooling, dim)
+        if weights is not None:
+            vecs = vecs * weights[..., None].astype(vecs.dtype)
+        pooled = vecs.sum(axis=-2)
+    if bag.combiner == "mean":
+        pooled = pooled / jnp.asarray(bag.pooling, pooled.dtype)
+    return pooled
+
+
+def multi_bag_lookup(
+    tables: Sequence[dict],
+    indices: jax.Array,
+    bags: Sequence[BagConfig],
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """All-tables GnR. ``indices``: (batch, num_tables, pooling).
+
+    Returns (batch, num_tables, dim). Tables may have heterogeneous vocab but
+    must share ``dim`` (DLRM convention).
+    """
+    outs = []
+    for t, (params, bag) in enumerate(zip(tables, bags)):
+        w = None if weights is None else weights[:, t]
+        outs.append(bag_lookup(params, indices[:, t], bag, w))
+    return jnp.stack(outs, axis=1)
+
+
+def traffic_model(bag: BagConfig, bytes_per_elem: int = 2) -> dict:
+    """Analytic DRAM-traffic amplification of weight-sharing (paper's premise).
+
+    Returns bytes-per-bag for: dense baseline, naive weight-sharing (every
+    physical row from DRAM), and LUT-fused execution (shared table pinned in
+    VMEM — the paper's scheme). Used by benchmarks to reproduce the
+    traffic-amplification table without hardware.
+    """
+    emb, p = bag.emb, bag.pooling
+    row = emb.dim * bytes_per_elem
+    dense = p * row
+    if emb.kind == "dense":
+        return {"dense": dense, "naive": dense, "fused": dense}
+    if emb.kind == "hashed":
+        naive = p * emb.hashed_k * row
+        return {"dense": dense, "naive": naive, "fused": naive}  # no tiny LUT to pin
+    naive = 2 * p * row                      # Q row + R row per index
+    fused = p * row                          # R served from VMEM LUT
+    return {"dense": dense, "naive": naive, "fused": fused}

@@ -1,0 +1,113 @@
+"""Weight-sharing hash constructions for embedding tables.
+
+The paper's technique family ("weight-sharing embedding layers") covers:
+
+* the **hashing trick** [Weinberger et al. '09]: one universal hash maps the
+  logical row id into a smaller physical table — k-ary variants reconstruct a
+  row from k physical rows;
+* the **quotient–remainder (QR / compositional) trick** [Shi et al. '20]:
+  complementary partitions ``(idx // c, idx % c)`` map each logical row to a
+  unique (q, r) pair; the logical row is reconstructed as ``op(Q[q], R[r])``.
+
+Everything here is pure index arithmetic (int32), jit-safe and shard-safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large odd multipliers for universal (multiply-shift) hashing.  Fixed seeds
+# keep traces reproducible across hosts/restarts (fault-tolerance requirement:
+# a restarted worker must hash identically).
+_MULTIPLIERS = np.array(
+    [0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1, 0x9E3779B9],
+    dtype=np.uint32,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QRSpec:
+    """Static shape spec of a quotient–remainder factorization."""
+
+    vocab: int          # logical rows
+    collision: int      # hash collision value "c" (R-table rows)
+    dim: int            # embedding dim of the reconstructed vector
+
+    @property
+    def q_rows(self) -> int:
+        return -(-self.vocab // self.collision)  # ceil div
+
+    @property
+    def r_rows(self) -> int:
+        return self.collision
+
+    @property
+    def compression(self) -> float:
+        """Capacity reduction factor vs. the dense table."""
+        dense = self.vocab * self.dim
+        shared = (self.q_rows + self.r_rows) * self.dim
+        return dense / shared
+
+    def lut_bytes(self, bytes_per_elem: int = 4) -> int:
+        """Size of the shared (R) table — the thing the paper pins in PIM SRAM.
+
+        On TPU this is the VMEM-resident LUT; it must be small (tens of KB).
+        """
+        return self.r_rows * self.dim * bytes_per_elem
+
+
+def qr_decompose(idx: jax.Array, collision: int) -> tuple[jax.Array, jax.Array]:
+    """Map logical indices to (quotient, remainder) physical indices.
+
+    Complementary partitions: (q, r) is unique per logical idx, so no two
+    logical rows share *both* physical rows.
+    """
+    idx = idx.astype(jnp.int32)
+    return idx // collision, idx % collision
+
+
+def universal_hash(idx: jax.Array, buckets: int, seed: int = 0) -> jax.Array:
+    """Multiply-shift universal hash of int indices into ``[0, buckets)``."""
+    mult = jnp.uint32(_MULTIPLIERS[seed % len(_MULTIPLIERS)])
+    h = (idx.astype(jnp.uint32) + jnp.uint32((seed * 0x517C_C1B7) & 0xFFFF_FFFF)) * mult
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2C1B_3C6D)
+    h = h ^ (h >> 12)
+    return (h % jnp.uint32(buckets)).astype(jnp.int32)
+
+
+def k_ary_hash(idx: jax.Array, buckets: int, k: int) -> jax.Array:
+    """k independent hashes per index; shape ``idx.shape + (k,)``."""
+    return jnp.stack([universal_hash(idx, buckets, seed=s) for s in range(k)], axis=-1)
+
+
+@partial(jax.jit, static_argnames=("collision", "q_rows", "num_shards"))
+def qr_shard_owner(
+    idx: jax.Array, collision: int, q_rows: int, num_shards: int
+) -> jax.Array:
+    """Which row-shard ("bank group") owns the Q row of each logical index."""
+    q, _ = qr_decompose(idx, collision)
+    return row_owner(q, q_rows, num_shards)
+
+
+def row_owner(row_idx: jax.Array, table_rows: int, num_shards: int) -> jax.Array:
+    """Owner shard under contiguous ("blocked") row sharding."""
+    rows_per_shard = -(-table_rows // num_shards)
+    return (row_idx // rows_per_shard).astype(jnp.int32)
+
+
+def local_row(row_idx: jax.Array, table_rows: int, num_shards: int) -> jax.Array:
+    """Row offset within the owner shard under contiguous sharding."""
+    rows_per_shard = -(-table_rows // num_shards)
+    return (row_idx % rows_per_shard).astype(jnp.int32)
+
+
+def padded_rows(table_rows: int, num_shards: int) -> int:
+    """Total rows after padding so every shard holds the same count."""
+    rows_per_shard = -(-table_rows // num_shards)
+    return rows_per_shard * num_shards

@@ -1,0 +1,39 @@
+"""Compute/communication overlap helpers.
+
+The PIM design hides GnR latency behind the dense compute stream (the
+embedding engine runs while the host does MLP work).  The XLA analogue is
+graph-level independence plus collective chunking so the scheduler can
+interleave ICI transfers with MXU work.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+
+def parallel_branches(f: Callable[..., T], g: Callable[..., U], fa, ga) -> tuple[T, U]:
+    """Evaluate two independent branches with no artificial data dependence.
+
+    DLRM's bottom-MLP (compute-bound) and embedding GnR (memory/ICI-bound) are
+    structured through this so XLA's latency-hiding scheduler can overlap them
+    — the graph-level analogue of PIM running concurrently with the host.
+    """
+    return f(*fa), g(*ga)
+
+
+def chunked_psum(x: jax.Array, axis_name: str, *, chunks: int = 1) -> jax.Array:
+    """psum split into ``chunks`` along the last dim.
+
+    Smaller collectives can be interleaved with neighbouring compute by the
+    scheduler (overlap hillclimb knob); chunks=1 is a plain psum.
+    """
+    if chunks <= 1:
+        return jax.lax.psum(x, axis_name)
+    parts = jnp.split(x, chunks, axis=-1)
+    return jnp.concatenate([jax.lax.psum(p, axis_name) for p in parts], axis=-1)

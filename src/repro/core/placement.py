@@ -1,0 +1,139 @@
+"""Tiered placement of weight-sharing tables (the paper's allocation strategy).
+
+The PIM paper splits the big (Q) table across a fast tier (HBM, near the PIM
+units) and a bulk tier (DIMM), sized so each tier's request rate matches its
+bandwidth; the tiny shared (R) table is pinned whole in per-PIM SRAM.
+
+TPU adaptation:
+
+* fast tier  -> rows **replicated** on every chip (served from local HBM, zero
+  ICI traffic);
+* bulk tier  -> rows **row-sharded** over the `model` axis (served with one
+  partial-sum + psum);
+* SRAM LUT   -> R table replicated and VMEM-pinned in the fused kernel.
+
+The split fraction is chosen by the same balance argument as the paper's
+Eq. (1), with HBM/DIMM bandwidths replaced by the TPU roofline terms:
+local-HBM service rate vs. ICI combine rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPlan:
+    """Placement decision for one table."""
+
+    hot_rows: np.ndarray        # logical Q-row ids in the replicated tier (host np)
+    hot_slot: np.ndarray        # (q_rows,) int32: slot in hot table, -1 if cold
+    hot_fraction: float         # fraction of rows replicated
+    expected_hot_hit: float     # fraction of *requests* served by the hot tier
+
+    @property
+    def num_hot(self) -> int:
+        return int(self.hot_rows.size)
+
+
+def profile_counts(q_indices: np.ndarray, q_rows: int) -> np.ndarray:
+    """Access-frequency profile from a trace of Q-row indices (host-side).
+
+    The paper collects this distribution after training, before inference; it
+    is a one-off pass over a trace.
+    """
+    return np.bincount(np.asarray(q_indices).reshape(-1), minlength=q_rows)
+
+
+def bandwidth_balanced_fraction(
+    *,
+    counts: np.ndarray,
+    hbm_gbps: float = 819.0,
+    ici_gbps_per_link: float = 50.0,
+    ici_links: int = 4,
+    safety: float = 1.0,
+) -> float:
+    """Pick the replicated-tier *request* share to balance HBM vs ICI service.
+
+    Paper analog of  Request_HBM / Request_DIMM = BW_HBM / BW_DIMM:
+    requests served locally (replicated tier) cost HBM bytes only; requests to
+    the sharded tier additionally cost one pooled-vector ICI combine.  We size
+    the hot tier so the sharded-tier ICI time does not exceed the HBM time,
+    i.e. hot request share >= 1 - (ICI/HBM) * safety, clamped to [0, 1).
+    """
+    ici = ici_gbps_per_link * ici_links
+    target_cold_share = min(1.0, (ici / hbm_gbps) * safety)
+    return float(np.clip(1.0 - target_cold_share, 0.0, 0.999))
+
+
+def plan_tiers(
+    counts: np.ndarray,
+    *,
+    request_share: float | None = None,
+    hot_fraction: float | None = None,
+    max_hot_rows: int | None = None,
+) -> TierPlan:
+    """Choose the hot (replicated) row set from an access profile.
+
+    Exactly one of ``request_share`` (cumulative-request target, paper style:
+    "hot vectors = rows covering X% of requests") or ``hot_fraction`` (row-count
+    fraction) should be given.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    q_rows = counts.size
+    order = np.argsort(-counts, kind="stable")
+    total = max(1, counts.sum())
+    if hot_fraction is not None:
+        num_hot = int(round(hot_fraction * q_rows))
+    else:
+        share = 0.8 if request_share is None else request_share
+        cum = np.cumsum(counts[order]) / total
+        num_hot = int(np.searchsorted(cum, share) + 1) if share > 0 else 0
+        num_hot = min(num_hot, q_rows)
+    if max_hot_rows is not None:
+        num_hot = min(num_hot, max_hot_rows)
+    hot_rows = np.sort(order[:num_hot])
+    hot_slot = np.full((q_rows,), -1, dtype=np.int32)
+    hot_slot[hot_rows] = np.arange(num_hot, dtype=np.int32)
+    hit = float(counts[hot_rows].sum() / total)
+    return TierPlan(
+        hot_rows=hot_rows,
+        hot_slot=hot_slot,
+        hot_fraction=num_hot / max(1, q_rows),
+        expected_hot_hit=hit,
+    )
+
+
+def split_table(table: jax.Array, plan: TierPlan) -> tuple[jax.Array, jax.Array]:
+    """Split a Q table into (hot_table, cold_table_with_zeroed_hot_rows).
+
+    The cold table keeps full shape (simplifies contiguous row-sharding and
+    checkpoint layout); hot rows are zeroed there so hot+cold lookups never
+    double-count.  Capacity overhead = hot_fraction, by design small.
+    """
+    hot = table[jnp.asarray(plan.hot_rows, dtype=jnp.int32)]
+    mask = jnp.asarray(plan.hot_slot < 0, dtype=table.dtype)[:, None]
+    cold = table * mask
+    return hot, cold
+
+
+def hot_vector_reduction_curve(
+    counts_logical: np.ndarray, collisions: list[int], request_share: float = 0.8
+) -> dict[int, int]:
+    """Paper's shortcoming analysis: #hot vectors vs. hash-collision value.
+
+    Quotient hashing folds ``c`` consecutive logical rows into one Q row; hot
+    logical rows stay hot but rarely cluster, so the hot-row count shrinks
+    sub-linearly in ``c``.  Returns {collision: num_hot_rows}.
+    """
+    counts_logical = np.asarray(counts_logical, dtype=np.int64)
+    out: dict[int, int] = {}
+    for c in collisions:
+        pad = (-counts_logical.size) % c
+        folded = np.pad(counts_logical, (0, pad)).reshape(-1, c).sum(axis=1)
+        out[c] = plan_tiers(folded, request_share=request_share).num_hot
+    return out

@@ -1,0 +1,175 @@
+"""Weight-sharing embedding modules (dense / hashed / quotient–remainder).
+
+Functional style: ``init(key, cfg) -> params``, ``lookup(params, idx, cfg)``.
+Params are plain dict pytrees; logical sharding axes are provided by
+``param_axes(cfg)`` as a parallel tree of axis-name tuples, resolved to mesh
+axes by ``repro.distributed.sharding``.
+
+The QR path is the paper's target operator.  Reconstruction supports the three
+ops of Shi et al. — ``add`` (default; associativity enables the two-level
+partial-reduce that the PIM scheme exploits), ``mul`` and ``concat``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+EmbeddingKind = Literal["dense", "hashed", "qr"]
+Reconstruction = Literal["add", "mul", "concat"]
+
+# Physical row counts are padded so mesh axes divide them (odd vocabs like
+# whisper's 51,866 stay row-shardable). Lookups never touch pad rows; logits
+# heads slice back to the logical vocab.
+ROW_PAD = 128
+
+
+def _pad_rows(rows: int) -> int:
+    return -(-rows // ROW_PAD) * ROW_PAD
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    vocab: int
+    dim: int
+    kind: EmbeddingKind = "dense"
+    collision: int = 64               # QR hash-collision value c
+    reconstruction: Reconstruction = "add"
+    hashed_rows: int = 0              # physical rows for kind="hashed" (0 -> vocab//collision)
+    hashed_k: int = 2                 # k-ary reconstruction for hashing trick
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    # Fraction of Q-table rows replicated as the "hot" tier (paper's HBM tier).
+    hot_fraction: float = 0.0
+    # Tied-head mode: "factorized" (beyond-paper FLOP cut) or "materialize"
+    # (paper-faithful: logits against the reconstructed logical table).
+    head: str = "factorized"
+
+    @property
+    def qr_spec(self) -> hashing.QRSpec:
+        return hashing.QRSpec(vocab=self.vocab, collision=self.collision, dim=self.dim)
+
+    @property
+    def physical_hashed_rows(self) -> int:
+        return self.hashed_rows or max(1, self.vocab // self.collision)
+
+    def param_count(self) -> int:
+        if self.kind == "dense":
+            return self.vocab * self.dim
+        if self.kind == "hashed":
+            return self.physical_hashed_rows * self.dim
+        spec = self.qr_spec
+        if self.reconstruction == "concat":
+            return (spec.q_rows + spec.r_rows) * (self.dim // 2)
+        return (spec.q_rows + spec.r_rows) * self.dim
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: EmbeddingConfig) -> dict:
+    scale = cfg.dim ** -0.5
+    if cfg.kind == "dense":
+        return {
+            "table": jax.random.normal(
+                key, (_pad_rows(cfg.vocab), cfg.dim), cfg.param_dtype
+            ) * scale
+        }
+    if cfg.kind == "hashed":
+        return {
+            "table": jax.random.normal(
+                key, (_pad_rows(cfg.physical_hashed_rows), cfg.dim), cfg.param_dtype
+            ) * scale
+        }
+    spec = cfg.qr_spec
+    kq, kr = jax.random.split(key)
+    dim = cfg.dim // 2 if cfg.reconstruction == "concat" else cfg.dim
+    q = jax.random.normal(kq, (_pad_rows(spec.q_rows), dim), cfg.param_dtype) * scale
+    if cfg.reconstruction == "mul":
+        # Multiplicative sharing: R initialized around 1 so early training is stable.
+        r = 1.0 + 0.01 * jax.random.normal(kr, (spec.r_rows, dim), cfg.param_dtype)
+    else:
+        r = jax.random.normal(kr, (spec.r_rows, dim), cfg.param_dtype) * scale
+    return {"q": q, "r": r}
+
+
+def param_axes(cfg: EmbeddingConfig) -> dict:
+    """Logical sharding axes per parameter leaf.
+
+    ``qrow``/``vocab`` rows are the "bank-group" partition axis; ``rrow`` is the
+    replicated LUT tier (never sharded — it lives in every chip's VMEM).
+    """
+    if cfg.kind in ("dense", "hashed"):
+        return {"table": ("vocab", "embed")}
+    return {"q": ("qrow", "embed"), "r": ("rrow", "embed")}
+
+
+# ---------------------------------------------------------------------------
+# lookup (reference, pure-jnp; the Pallas fused kernel lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+def lookup(params: dict, idx: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
+    """Logical-row lookup ``idx -> (..., dim)`` with weight-sharing expansion."""
+    if cfg.kind == "dense":
+        return params["table"].astype(cfg.compute_dtype)[idx]
+    if cfg.kind == "hashed":
+        table = params["table"].astype(cfg.compute_dtype)
+        hs = hashing.k_ary_hash(idx, cfg.physical_hashed_rows, cfg.hashed_k)
+        return table[hs].sum(axis=-2)
+    q_idx, r_idx = hashing.qr_decompose(idx, cfg.collision)
+    q = params["q"].astype(cfg.compute_dtype)[q_idx]
+    r = params["r"].astype(cfg.compute_dtype)[r_idx]
+    return reconstruct(q, r, cfg.reconstruction)
+
+
+def reconstruct(q: jax.Array, r: jax.Array, op: Reconstruction) -> jax.Array:
+    if op == "add":
+        return q + r
+    if op == "mul":
+        return q * r
+    if op == "concat":
+        return jnp.concatenate([q, r], axis=-1)
+    raise ValueError(f"unknown reconstruction {op!r}")
+
+
+def materialize(params: dict, cfg: EmbeddingConfig) -> jax.Array:
+    """Reconstruct the full logical table ``(vocab, dim)``.
+
+    Used by the tied LM head (baseline path) and by tests as an oracle.
+    """
+    all_idx = jnp.arange(cfg.vocab, dtype=jnp.int32)
+    return lookup(params, all_idx, cfg)
+
+
+def logits_head(params: dict, x: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
+    """Tied-embedding LM head ``x @ E^T`` exploiting the QR factorization.
+
+    Beyond-paper optimization: for ``add`` reconstruction,
+    ``logits[v] = x·Q[v//c] + x·R[v%c]`` — so we matmul against the *physical*
+    tables (q_rows + c columns instead of vocab) and expand by gather. This
+    cuts head FLOPs by ~`collision`× while producing identical logits.
+    """
+    if cfg.kind == "dense":
+        return (x @ params["table"].astype(cfg.compute_dtype).T)[..., : cfg.vocab]
+    if cfg.kind == "hashed":
+        table = params["table"].astype(cfg.compute_dtype)
+        hs = hashing.k_ary_hash(
+            jnp.arange(cfg.vocab, dtype=jnp.int32), cfg.physical_hashed_rows, cfg.hashed_k
+        )  # (vocab, k)
+        small = x @ table.T  # (..., rows)
+        return small[..., hs].sum(axis=-1)
+    if cfg.reconstruction != "add" or cfg.head == "materialize":
+        # mul/concat heads — and the paper-faithful mode — materialize the
+        # logical (vocab, dim) table and matmul against it.
+        return x @ materialize(params, cfg).T
+    all_idx = jnp.arange(cfg.vocab, dtype=jnp.int32)
+    q_idx, r_idx = hashing.qr_decompose(all_idx, cfg.collision)
+    xq = x @ params["q"].astype(cfg.compute_dtype).T  # (..., q_rows)
+    xr = x @ params["r"].astype(cfg.compute_dtype).T  # (..., c)
+    return xq[..., q_idx] + xr[..., r_idx]

@@ -1,0 +1,382 @@
+"""Two-level sharded gather-and-reduce — the paper's PIM scheme on a TPU mesh.
+
+Mapping (see DESIGN.md §2):
+
+* bank-group PIM  -> one chip holding a contiguous **row shard** of the Q/dense
+  table in HBM; it gathers + partially reduces only rows it owns ("local GnR");
+* base-die PIM    -> a single ``psum`` over the `model` mesh axis combining the
+  per-shard pooled partials (one vector per bag — never raw rows on the wire);
+* SRAM LUT        -> the R table **replicated** on every chip; R contributions
+  are served locally and spread across shards by bag position for load balance;
+* HBM hot tier    -> the hottest Q rows replicated on every chip (TierPlan);
+  on TPU the win is Zipf load-balance: skewed rows no longer hammer one
+  shard's HBM, and no extra collective is introduced (hot partials ride the
+  same psum).
+
+Associativity of the ``add`` reconstruction is what legalizes all of this —
+exactly the paper's argument for why Q rows and R rows may live anywhere.
+
+All ``*_partial`` functions run **inside** ``shard_map`` and take local shards;
+``build_*`` helpers wrap them into jitted global-array callables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hashing
+from repro.core.embedding_bag import BagConfig
+from repro.core.qr_embedding import EmbeddingConfig
+
+# Q tables are padded so every potential model-axis size divides the row count.
+ROW_PAD = 128
+
+
+def padded_q_rows(cfg: EmbeddingConfig) -> int:
+    rows = cfg.qr_spec.q_rows if cfg.kind == "qr" else cfg.vocab
+    return -(-rows // ROW_PAD) * ROW_PAD
+
+
+def pad_q_table(table: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
+    rows = padded_q_rows(cfg)
+    if table.shape[0] == rows:
+        return table
+    pad = rows - table.shape[0]
+    return jnp.pad(table, ((0, pad), (0, 0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Static description of one table's tiered sharding."""
+
+    cfg: EmbeddingConfig
+    num_shards: int                      # size of the row-shard ("model") axis
+    num_hot: int = 0                     # replicated-tier rows (0 = no hot tier)
+
+    @property
+    def q_rows_padded(self) -> int:
+        return padded_q_rows(self.cfg)
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.q_rows_padded // self.num_shards
+
+
+# ---------------------------------------------------------------------------
+# local ("bank-group") partials — run inside shard_map
+# ---------------------------------------------------------------------------
+
+def _owned_rows_gather(
+    q_shard: jax.Array, q_idx: jax.Array, plan: ShardPlan, axis: str
+) -> jax.Array:
+    """Gather rows of ``q_idx`` owned by this shard; zeros elsewhere.
+
+    q_shard: (rows_per_shard, dim) local. q_idx: (...,) global Q-row ids.
+    """
+    shard = jax.lax.axis_index(axis)
+    local = q_idx - shard * plan.rows_per_shard
+    owned = (local >= 0) & (local < plan.rows_per_shard)
+    local = jnp.clip(local, 0, plan.rows_per_shard - 1)
+    rows = q_shard[local]
+    return rows * owned[..., None].astype(rows.dtype)
+
+
+def qr_bag_partial(
+    q_shard: jax.Array,
+    r_full: jax.Array,
+    idx: jax.Array,
+    plan: ShardPlan,
+    *,
+    axis: str = "model",
+    hot_table: jax.Array | None = None,
+    hot_slot: jax.Array | None = None,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Local pooled partial for one QR-add bag. idx: (..., pooling) -> (..., dim).
+
+    Tier routing per index:
+      hot   -> replicated table, spread across shards by bag position;
+      cold  -> owner shard's local Q shard;
+      R     -> replicated LUT, spread by bag position.
+    The caller psums the result over ``axis`` (the base-die combine).
+    """
+    cfg = plan.cfg
+    shard = jax.lax.axis_index(axis)
+    nsh = plan.num_shards
+    q_idx, r_idx = hashing.qr_decompose(idx, cfg.collision)
+    pooling = idx.shape[-1]
+    # Spread replicated-tier work across shards by position (paper: R tables
+    # spread evenly across LUTs / load balance between bank groups).
+    pos_mine = (jnp.arange(pooling, dtype=jnp.int32) % nsh) == shard
+
+    compute = cfg.compute_dtype
+    if hot_table is not None:
+        slot = hot_slot[q_idx]                       # (..., pooling)
+        is_hot = slot >= 0
+        hot_rows = hot_table.astype(compute)[jnp.clip(slot, 0)]
+        hot_rows = hot_rows * (is_hot & pos_mine)[..., None].astype(compute)
+        cold_gather_idx = q_idx
+        cold_rows = _owned_rows_gather(q_shard.astype(compute), cold_gather_idx, plan, axis)
+        cold_rows = cold_rows * (~is_hot)[..., None].astype(compute)
+        q_rows = hot_rows + cold_rows
+    else:
+        q_rows = _owned_rows_gather(q_shard.astype(compute), q_idx, plan, axis)
+
+    r_rows = r_full.astype(compute)[r_idx] * pos_mine[..., None].astype(compute)
+    rows = q_rows + r_rows
+    if weights is not None:
+        rows = rows * weights[..., None].astype(compute)
+    return rows.sum(axis=-2)
+
+
+def dense_bag_partial(
+    table_shard: jax.Array,
+    idx: jax.Array,
+    plan: ShardPlan,
+    *,
+    axis: str = "model",
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Local pooled partial for a dense (non-weight-sharing) bag."""
+    rows = _owned_rows_gather(table_shard.astype(plan.cfg.compute_dtype), idx, plan, axis)
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    return rows.sum(axis=-2)
+
+
+def qr_token_partial(
+    q_shard: jax.Array,
+    r_full: jax.Array,
+    idx: jax.Array,
+    plan: ShardPlan,
+    *,
+    axis: str = "model",
+    hot_table: jax.Array | None = None,
+    hot_slot: jax.Array | None = None,
+) -> jax.Array:
+    """Per-token (no pooling) partial: idx (...,) -> (..., dim); psum over axis.
+
+    R rows are replicated so only shard 0 contributes them (no position axis to
+    spread over); hot rows likewise. The psum exists only for cold Q rows —
+    with a hot tier covering all requests it degenerates to a local lookup.
+    """
+    cfg = plan.cfg
+    shard = jax.lax.axis_index(axis)
+    q_idx, r_idx = hashing.qr_decompose(idx, cfg.collision)
+    compute = cfg.compute_dtype
+    first = (shard == 0)
+
+    if hot_table is not None:
+        slot = hot_slot[q_idx]
+        is_hot = slot >= 0
+        hot_rows = hot_table.astype(compute)[jnp.clip(slot, 0)]
+        hot_rows = hot_rows * (is_hot & first)[..., None].astype(compute)
+        cold = _owned_rows_gather(q_shard.astype(compute), q_idx, plan, axis)
+        cold = cold * (~is_hot)[..., None].astype(compute)
+        q_rows = hot_rows + cold
+    else:
+        q_rows = _owned_rows_gather(q_shard.astype(compute), q_idx, plan, axis)
+
+    r_rows = r_full.astype(compute)[r_idx] * jnp.asarray(first, compute)
+    return q_rows + r_rows
+
+
+# ---------------------------------------------------------------------------
+# global wrappers
+# ---------------------------------------------------------------------------
+
+def shard_qr_params(
+    params: dict, cfg: EmbeddingConfig, mesh: Mesh, *, row_axis: str = "model"
+) -> dict:
+    """Device-put QR params with the tiered layout's shardings."""
+    out = {}
+    if "q" in params:
+        out["q"] = jax.device_put(
+            pad_q_table(params["q"], cfg), NamedSharding(mesh, P(row_axis, None))
+        )
+        out["r"] = jax.device_put(params["r"], NamedSharding(mesh, P()))  # LUT tier
+    else:
+        out["table"] = jax.device_put(
+            pad_q_table(params["table"], cfg), NamedSharding(mesh, P(row_axis, None))
+        )
+    return out
+
+
+def build_multi_bag_gnr(
+    mesh: Mesh,
+    bags: Sequence[BagConfig],
+    *,
+    batch_axis: str = "data",
+    row_axis: str = "model",
+    hot: bool = False,
+):
+    """Jitted global GnR over all tables: the end-to-end two-level scheme.
+
+    Signature of the returned fn:
+        fn(tables: list[dict], indices: (B, T, pooling) int32,
+           hot_tiers: list[dict] | None) -> (B, T, dim)
+
+    ``tables[t]`` holds padded ``q``(+``r``) or ``table``; ``hot_tiers[t]`` holds
+    ``hot_table`` + ``hot_slot`` when the tier plan replicates rows.
+    """
+    nsh = mesh.shape[row_axis]
+    plans = [ShardPlan(b.emb, nsh) for b in bags]
+
+    def local_fn(tables, indices, hot_tiers):
+        outs = []
+        for t, (bag, plan) in enumerate(zip(bags, plans)):
+            idx = indices[:, t]
+            params = tables[t]
+            tier = None if hot_tiers is None else hot_tiers[t]
+            if bag.emb.kind == "qr":
+                part = qr_bag_partial(
+                    params["q"], params["r"], idx, plan, axis=row_axis,
+                    hot_table=None if tier is None else tier["hot_table"],
+                    hot_slot=None if tier is None else tier["hot_slot"],
+                )
+            else:
+                part = dense_bag_partial(params["table"], idx, plan, axis=row_axis)
+            if bag.combiner == "mean":
+                part = part / jnp.asarray(bag.pooling, part.dtype)
+            outs.append(part)
+        stacked = jnp.stack(outs, axis=1)                     # (B_local, T, dim)
+        return jax.lax.psum(stacked, row_axis)                # base-die combine
+
+    def table_specs(bag):
+        if bag.emb.kind == "qr":
+            return {"q": P(row_axis, None), "r": P()}
+        return {"table": P(row_axis, None)}
+
+    in_specs = (
+        [table_specs(b) for b in bags],
+        P(batch_axis, None, None),
+        None if not hot else [{"hot_table": P(), "hot_slot": P()} for _ in bags],
+    )
+    out_specs = P(batch_axis, None, None)
+
+    @jax.jit
+    def fn(tables, indices, hot_tiers=None):
+        return jax.shard_map(
+            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(tables, indices, hot_tiers)
+
+    return fn
+
+
+def build_token_embed(
+    mesh: Mesh,
+    cfg: EmbeddingConfig,
+    *,
+    batch_axis: str = "data",
+    row_axis: str = "model",
+    hot: bool = False,
+):
+    """Jitted token-embedding lookup (B, S) -> (B, S, dim), two-level scheme."""
+    nsh = mesh.shape[row_axis]
+    plan = ShardPlan(cfg, nsh)
+
+    def local_fn(params, idx, tier):
+        if cfg.kind == "qr":
+            part = qr_token_partial(
+                params["q"], params["r"], idx, plan, axis=row_axis,
+                hot_table=None if tier is None else tier["hot_table"],
+                hot_slot=None if tier is None else tier["hot_slot"],
+            )
+        else:
+            part = _owned_rows_gather(
+                params["table"].astype(cfg.compute_dtype), idx, plan, axis=row_axis
+            )
+        return jax.lax.psum(part, row_axis)
+
+    tspec = {"q": P(row_axis, None), "r": P()} if cfg.kind == "qr" else {
+        "table": P(row_axis, None)
+    }
+    in_specs = (
+        tspec,
+        P(batch_axis, None),
+        None if not hot else {"hot_table": P(), "hot_slot": P()},
+    )
+
+    @jax.jit
+    def fn(params, idx, tier=None):
+        return jax.shard_map(
+            local_fn, mesh=mesh, in_specs=in_specs,
+            out_specs=P(batch_axis, None, None), check_vma=False,
+        )(params, idx, tier)
+
+    return fn
+
+
+def gspmd_baseline_gnr(mesh: Mesh, bags: Sequence[BagConfig], *, batch_axis="data",
+                       row_axis="model"):
+    """The no-technique baseline: plain gathers under GSPMD auto-sharding.
+
+    XLA materializes all-gathers of table rows; benchmarks diff its collective
+    bytes against the two-level scheme to reproduce the paper's headline win.
+    """
+    from repro.core import embedding_bag
+
+    def fn(tables, indices):
+        tables = [
+            {
+                k: jax.lax.with_sharding_constraint(
+                    v, NamedSharding(mesh, P(row_axis, None))
+                )
+                for k, v in t.items()
+            }
+            for t in tables
+        ]
+        indices = jax.lax.with_sharding_constraint(
+            indices, NamedSharding(mesh, P(batch_axis, None, None))
+        )
+        return embedding_bag.multi_bag_lookup(tables, indices, bags)
+
+    return jax.jit(fn)
+
+
+def token_embed_inline(params: dict, idx: jax.Array, cfg: EmbeddingConfig,
+                       *, row_axis: str = "model") -> jax.Array:
+    """Two-level GnR token embedding usable INSIDE a jitted model body.
+
+    Reads the active mesh/rules from ``repro.distributed.sharding`` (set by
+    the launcher's ``use_rules``); falls back to the plain lookup when no mesh
+    is active or the row axis is absent. Differentiable: the backward pass is
+    the transposed scatter-add into the local Q shard + psum, exactly the
+    partial-reduce scheme in reverse.
+
+    This is the paper's execution scheme as a drop-in for the GSPMD gather:
+    the Q row is fetched only on its owner shard ("bank-group" locality), the
+    replicated R add happens on one shard, and a single pooled psum combines —
+    XLA's alternative would all-gather table rows to the data shards.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as SH
+
+    mesh = SH.current_mesh()
+    if mesh is None or row_axis not in mesh.shape or cfg.kind != "qr":
+        from repro.core import qr_embedding
+
+        return qr_embedding.lookup(params, idx, cfg)
+
+    nsh = mesh.shape[row_axis]
+    plan = ShardPlan(cfg, nsh)
+    batch_spec = SH.spec_for(("batch",))[0]
+
+    def local_fn(q_shard, r_full, idx_l):
+        part = qr_token_partial(q_shard, r_full, idx_l, plan, axis=row_axis)
+        return jax.lax.psum(part, row_axis)
+
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(row_axis, None), P(), P(batch_spec, None)),
+        out_specs=P(batch_spec, None, None),
+        check_vma=False,
+    )(params["q"], params["r"], idx)

@@ -1,0 +1,169 @@
+"""Synthetic data: LM token streams + criteo-like long-tail embedding traces.
+
+Determinism contract (fault-tolerance requirement): every batch is a pure
+function of ``(seed, step)`` — a restarted or re-scheduled worker regenerates
+byte-identical batches, so checkpoint-resume and straggler re-execution are
+replay-exact.  Zipf traces model the paper's long-tail access distribution
+(\"a small subset of embeddings takes the majority of access\" — the hot-vector
+premise behind the tiered placement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig, ModelConfig
+
+
+def _key(seed: int, step: int, tag: int = 0) -> jax.Array:
+    return jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), tag)
+
+
+# ---------------------------------------------------------------------------
+# LM batches
+# ---------------------------------------------------------------------------
+
+def lm_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0, step: int = 0):
+    tokens = jax.random.randint(_key(seed, step), (batch, seq), 0, cfg.vocab, jnp.int32)
+    return {"tokens": tokens}
+
+
+def whisper_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0, step: int = 0):
+    from repro.models.whisper import N_AUDIO
+
+    frames = jax.random.normal(
+        _key(seed, step, 1), (batch, N_AUDIO, cfg.d_model), jnp.float32
+    )
+    tokens = jax.random.randint(_key(seed, step), (batch, seq), 0, cfg.vocab, jnp.int32)
+    return {"frames": frames, "tokens": tokens}
+
+
+def pixtral_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0, step: int = 0):
+    patches = jax.random.normal(
+        _key(seed, step, 1), (batch, cfg.num_patches, cfg.d_model), jnp.float32
+    )
+    tokens = jax.random.randint(_key(seed, step), (batch, seq), 0, cfg.vocab, jnp.int32)
+    return {"patches": patches, "tokens": tokens}
+
+
+# ---------------------------------------------------------------------------
+# long-tail (Zipf) traces — the paper's access model
+# ---------------------------------------------------------------------------
+
+def zipf_probs(vocab: int, alpha: float = 1.05) -> np.ndarray:
+    """Zipf(alpha) over a fixed random permutation of row ids.
+
+    The permutation matters: the paper observes hot rows are *scattered* across
+    the table (which is why quotient-folding shrinks the hot set sub-linearly);
+    an unpermuted Zipf would cluster them at low ids and overstate the gain.
+    """
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    p /= p.sum()
+    rng = np.random.default_rng(1234)
+    perm = rng.permutation(vocab)
+    out = np.empty_like(p)
+    out[perm] = p
+    return out
+
+
+def zipf_trace(
+    vocab: int, n: int, *, alpha: float = 1.05, seed: int = 0, step: int = 0
+) -> np.ndarray:
+    """n long-tail logical indices (host-side numpy, for profiling/benches)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    return rng.choice(vocab, size=n, p=zipf_probs(vocab, alpha)).astype(np.int32)
+
+
+def zipf_batch_jax(
+    vocab: int, shape: tuple, *, alpha: float = 1.05, seed: int = 0, step: int = 0
+) -> jax.Array:
+    """Device-side approximate Zipf sampling via inverse-CDF on uniform draws."""
+    u = jax.random.uniform(_key(seed, step, 2), shape, jnp.float32, 1e-6, 1.0)
+    # inverse CDF of a continuous zipf-like density x^-alpha on [1, vocab]
+    a = 1.0 - alpha
+    x = ((vocab ** a - 1.0) * u + 1.0) ** (1.0 / a)
+    idx = jnp.clip(x.astype(jnp.int32) - 1, 0, vocab - 1)
+    # fixed permutation to scatter hot ids (cheap multiplicative shuffle)
+    return ((idx.astype(jnp.uint32) * np.uint32(2654435761)) % np.uint32(vocab)).astype(
+        jnp.int32
+    )
+
+
+def dlrm_batch(
+    cfg: DLRMConfig, batch: int, *, seed: int = 0, step: int = 0, alpha: float = 1.05
+):
+    """Dense features + per-table multi-hot Zipf indices + random labels."""
+    dense = jax.random.normal(_key(seed, step, 3), (batch, cfg.num_dense), jnp.float32)
+    idx = zipf_batch_jax(
+        cfg.vocab_per_table, (batch, cfg.num_tables, cfg.pooling),
+        alpha=alpha, seed=seed, step=step,
+    )
+    labels = jax.random.bernoulli(_key(seed, step, 4), 0.25, (batch,)).astype(jnp.float32)
+    return {"dense": dense, "idx": idx, "labels": labels}
+
+
+def dlrm_truth(cfg: DLRMConfig, *, dim: int = 8, seed: int = 99) -> jax.Array:
+    """Ground-truth item embeddings for planted-structure CTR labels."""
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (cfg.vocab_per_table, dim)
+    ) * 0.5
+
+
+def dlrm_planted_batch(
+    cfg: DLRMConfig, truth: jax.Array, batch: int, *, seed: int = 0, step: int = 0,
+    alpha: float = 1.05,
+):
+    """CTR batch whose labels come from a planted embedding model — a learnable
+    signal, so AUC against it measures real model quality (used by the
+    collision-vs-quality reproduction and the DLRM example)."""
+    dense = jax.random.normal(_key(seed, step, 3), (batch, cfg.num_dense), jnp.float32)
+    idx = zipf_batch_jax(
+        cfg.vocab_per_table, (batch, cfg.num_tables, cfg.pooling),
+        alpha=alpha, seed=seed, step=step,
+    )
+    score = truth[idx].sum(axis=(1, 2)).mean(-1) + 0.1 * dense.sum(-1)
+    prob = jax.nn.sigmoid(score - score.mean())
+    labels = (
+        jax.random.uniform(_key(seed, step, 4), (batch,)) < prob
+    ).astype(jnp.float32)
+    return {"dense": dense, "idx": idx, "labels": labels}
+
+
+# ---------------------------------------------------------------------------
+# sharded host pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Pipeline:
+    """Deterministic, restart-safe batch iterator.
+
+    ``state()`` returns the cursor persisted in checkpoints; ``seek`` resumes.
+    Each host in a multi-host launch uses its own ``shard``/``num_shards`` and
+    generates only its slice, identical across retries (straggler-safe).
+    """
+
+    make_batch: callable
+    seed: int = 0
+    step: int = 0
+    shard: int = 0
+    num_shards: int = 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b = self.make_batch(seed=self.seed * self.num_shards + self.shard, step=self.step)
+        self.step += 1
+        return b
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def seek(self, state: dict) -> None:
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])

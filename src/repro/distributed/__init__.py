@@ -1,0 +1,1 @@
+from repro.distributed import collectives, sharding  # noqa: F401

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ a fused attention
+kernel motivated by the roofline analysis). Validated with interpret=True on
+CPU against the pure-jnp oracles in ``ref.py``; ``ops.py`` is the public
+jit'd surface with shape dispatch and CPU fallbacks.
+
+* ``qr_gather``        — fused QR lookup: HBM Q-row DMA + VMEM-resident R LUT
+                         (the paper's shared-table-in-SRAM mechanism)
+* ``gnr_bag``          — pooled gather-and-reduce bag with fp32 VMEM
+                         accumulator (the bank-group partial-GnR unit)
+* ``flash_attention``  — VMEM-resident online-softmax attention (kills the
+                         dominant memory-roofline term; see EXPERIMENTS §Perf)
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

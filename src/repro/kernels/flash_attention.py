@@ -1,0 +1,174 @@
+"""Pallas TPU flash attention — the answer to the dominant roofline term.
+
+The §Perf analysis (EXPERIMENTS.md) shows ~80% of the memory term of every
+train/prefill cell is the (Bq, Bk) probability/score tiles that a lax-level
+blockwise attention materializes in HBM.  On TPU those tiles belong in VMEM:
+this kernel keeps the online-softmax state (m, l, acc) in VMEM scratch across
+the KV-block grid dimension and writes only the (Sq, D) output to HBM — HBM
+traffic becomes q+k+v+o, cutting the attention share of the memory term by
+~50x (tile bytes / qkvo bytes = Bk x heads / ~4D).
+
+Layout: grid (B*KH, nq, nk); KV streams innermost so the q tile + state stay
+resident; GQA handled by folding the group dim into the q-tile rows (g*Bq
+rows share one KV head).  MXU-aligned: D and blocks multiples of 128 where
+the arch allows; `_fit_block` picks divisors otherwise.
+
+Backward: `flash_mha` carries a custom_vjp whose backward recomputes with the
+lax reference (flash-style, O(S) memory) — exact same math, so gradients are
+identical to the reference path; a fused backward kernel is the listed
+follow-up in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fit_block(n: int, target: int) -> int:
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, q_block: int, kv_block: int, nk: int):
+    """One (q-tile, kv-tile) step. Scratch m/l/acc persist across the kv grid."""
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update():
+        q = q_ref[0].astype(jnp.float32) * scale          # (gq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                       # (gq, bk) in VMEM
+        if causal:
+            # rows are g groups x q_block query positions
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % q_block
+            qpos = q_i * q_block + rows
+            kpos = kv_i * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_cur)                            # stays in VMEM
+        corr = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_prev * corr + p.sum(-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+
+    if causal:
+        # skip fully-masked kv tiles (block-sparse causal schedule)
+        @pl.when(kv_i * kv_block <= q_i * q_block + q_block - 1)
+        def _():
+            _update()
+    else:
+        _update()
+
+    @pl.when(kv_i == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "q_block", "kv_block", "interpret")
+)
+def flash_fwd(
+    q: jax.Array,          # (B, H, Sq, D)
+    k: jax.Array,          # (B, KH, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    qb = _fit_block(sq, q_block)
+    kb = _fit_block(skv, kv_block)
+    nq, nk = sq // qb, skv // kb
+
+    # fold (B, KH) into one grid dim; q-tile qi holds g * qb rows (every GQA
+    # group's slice of that query block shares this tile's KV stream)
+    qf = _tile_groups(q.reshape(b, kh, g, sq, d).reshape(b * kh, g * sq, d), g, sq, qb)
+    kf = k.reshape(b * kh, skv, d)
+    vf = v.reshape(b * kh, skv, d)
+
+    grid = (b * kh, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, causal=causal, scale=scale, q_block=qb, kv_block=kb, nk=nk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g * qb, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kb, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, kb, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g * qb, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh, g * sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * qb, 1), jnp.float32),   # m
+            pltpu.VMEM((g * qb, 1), jnp.float32),   # l
+            pltpu.VMEM((g * qb, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = _untile_groups(out, g, sq, qb)
+    return out.reshape(b, kh, g, sq, d).reshape(b, h, sq, d)
+
+
+def _tile_groups(qf: jax.Array, g: int, sq: int, qb: int) -> jax.Array:
+    """(BKH, g*sq, d) group-major -> q-tile-major rows (g rows per tile)."""
+    bkh, _, d = qf.shape
+    x = qf.reshape(bkh, g, sq // qb, qb, d)
+    x = x.transpose(0, 2, 1, 3, 4)                 # (bkh, nq, g, qb, d)
+    return x.reshape(bkh, (sq // qb) * g * qb, d)
+
+
+def _untile_groups(of: jax.Array, g: int, sq: int, qb: int) -> jax.Array:
+    bkh, _, d = of.shape
+    x = of.reshape(bkh, sq // qb, g, qb, d)
+    x = x.transpose(0, 2, 1, 3, 4)
+    return x.reshape(bkh, g * sq, d)
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper: fused forward, reference (recompute) backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_mha(q, k, v, causal: bool = True, interpret: bool | None = None):
+    """Fused-forward attention with reference-recompute backward."""
+    it = jax.default_backend() != "tpu" if interpret is None else interpret
+    return flash_fwd(q, k, v, causal=causal, interpret=it)
+
+
+def _fwd(q, k, v, causal, interpret):
+    return flash_mha(q, k, v, causal, interpret), (q, k, v)
+
+
+def _bwd(causal, interpret, res, do):
+    from repro.models.layers import flash_attention
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: flash_attention(a, b, c, causal=causal), q, k, v)
+    return vjp(do)
+
+
+flash_mha.defvjp(_fwd, _bwd)

@@ -1,0 +1,125 @@
+"""Pooled gather-and-reduce kernel (embedding bag) with fused QR LUT.
+
+Computes ``out[b] = Σ_k ( Q[q_idx[b,k]] + R[r_idx[b,k]] )`` — the DLRM bag
+operator with the weight-sharing reconstruction folded into the reduction.
+
+TPU realization of the PIM partial-GnR unit:
+
+* grid ``(B, K, dim_tiles)`` — the output block for bag ``b`` is *revisited*
+  across the K steps (TPU grids execute sequentially, so in-place accumulation
+  into the output block is the idiomatic reduction pattern);
+* the accumulator lives in VMEM in fp32 (MAC-unit accuracy), initialized at
+  k==0 and written through on every step — bank-group MAC + register file;
+* Q rows stream from HBM via scalar-prefetched index maps (double-buffered by
+  the Pallas pipeline = proactive prefetch), R rows come from the resident
+  VMEM LUT; one bag element costs one HBM row, not two.
+
+A dense (non-weight-sharing) variant is included for baseline benches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_DIM_BLOCK = 512
+
+
+def _qr_kernel(q_idx_ref, r_idx_ref, q_row_ref, r_lut_ref, out_ref, *, k_steps):
+    # out_ref is the fp32 VMEM accumulator (bank-group MAC register file);
+    # it is revisited across the K grid steps of the same bag.
+    b, k = pl.program_id(0), pl.program_id(1)
+    row = q_row_ref[...].astype(jnp.float32)
+    r = r_idx_ref[b, k]
+    row = row + r_lut_ref[r, :][None, :].astype(jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + row
+
+
+def _dense_kernel(idx_ref, row_ref, out_ref, *, k_steps):
+    k = pl.program_id(1)
+    row = row_ref[...].astype(jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + row
+
+
+@functools.partial(jax.jit, static_argnames=("dim_block", "interpret"))
+def gnr_bag(
+    q_table: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    r_idx: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pooled QR bag. q_idx/r_idx: (B, K) int32 -> out (B, D)."""
+    bsz, k_steps = q_idx.shape
+    dim = q_table.shape[1]
+    bd = dim_block or min(dim, DEFAULT_DIM_BLOCK)
+    assert dim % bd == 0, f"dim {dim} not divisible by dim_block {bd}"
+
+    grid = (bsz, k_steps, dim // bd)
+    kernel = pl.pallas_call(
+        functools.partial(_qr_kernel, k_steps=k_steps),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bd), lambda b, k, j, qi, ri: (qi[b, k], j)),
+                pl.BlockSpec(
+                    (r_lut.shape[0], bd), lambda b, k, j, qi, ri: (0, j)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, bd), lambda b, k, j, qi, ri: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )
+    out = kernel(q_idx.astype(jnp.int32), r_idx.astype(jnp.int32), q_table, r_lut)
+    return out.astype(q_table.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dim_block", "interpret"))
+def gnr_bag_dense(
+    table: jax.Array,
+    idx: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pooled dense bag (baseline: no weight sharing). idx: (B, K) -> (B, D)."""
+    bsz, k_steps = idx.shape
+    dim = table.shape[1]
+    bd = dim_block or min(dim, DEFAULT_DIM_BLOCK)
+    assert dim % bd == 0
+
+    grid = (bsz, k_steps, dim // bd)
+    kernel = pl.pallas_call(
+        functools.partial(_dense_kernel, k_steps=k_steps),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, bd), lambda b, k, j, i: (i[b, k], j))],
+            out_specs=pl.BlockSpec((1, bd), lambda b, k, j, i: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )
+    return kernel(idx.astype(jnp.int32), table).astype(table.dtype)

@@ -1,0 +1,100 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch rules:
+
+* on CPU (this container) kernels run with ``interpret=True`` — the kernel body
+  executes in Python, validating the exact TPU program;
+* arbitrary leading index shapes are flattened to the kernel's (N,)/(B,K)
+  layouts and restored;
+* dims not divisible by the lane tile fall back to the jnp reference (the
+  assigned archs all have 128-aligned dims; tests exercise the fallback too).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gnr_bag as _gnr
+from repro.kernels import qr_gather as _qr
+from repro.kernels import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_dim_block(dim: int) -> int | None:
+    for bd in (512, 256, 128):
+        if dim % bd == 0:
+            return min(bd, dim)
+    return None if dim % 8 else dim  # small test dims: single tile; else fallback
+
+
+def qr_lookup(
+    q_table: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    r_idx: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused QR reconstruction for any index shape: (...,) -> (..., D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = q_table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.qr_lookup_ref(q_table, r_lut, q_idx, r_idx)
+    shape = q_idx.shape
+    out = _qr.qr_gather(
+        q_table, r_lut, q_idx.reshape(-1), r_idx.reshape(-1),
+        dim_block=bd, interpret=interpret,
+    )
+    return out.reshape(*shape, dim)
+
+
+def gnr_pooled(
+    q_table: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    r_idx: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pooled QR bag for index shape (..., K) -> (..., D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = q_table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.gnr_bag_ref(q_table, r_lut, q_idx, r_idx)
+    *lead, k = q_idx.shape
+    out = _gnr.gnr_bag(
+        q_table, r_lut, q_idx.reshape(-1, k), r_idx.reshape(-1, k),
+        dim_block=bd, interpret=interpret,
+    )
+    return out.reshape(*lead, dim)
+
+
+def gnr_pooled_dense(
+    table: jax.Array, idx: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Pooled dense bag for index shape (..., K) -> (..., D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.dense_bag_ref(table, idx)
+    *lead, k = idx.shape
+    out = _gnr.gnr_bag_dense(table, idx.reshape(-1, k), dim_block=bd, interpret=interpret)
+    return out.reshape(*lead, dim)
+
+
+def flash_attention_fused(q, k, v, *, causal=True, interpret=None):
+    """Fused VMEM-resident attention (Pallas) with reference-recompute vjp.
+
+    q: (B, H, Sq, D); k/v: (B, KH, Skv, D); GQA via KH | H.
+    """
+    from repro.kernels.flash_attention import flash_mha
+
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_mha(q, k, v, causal, interpret)

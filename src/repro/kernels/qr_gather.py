@@ -1,0 +1,77 @@
+"""Fused quotient–remainder gather kernel (the paper's LUT mechanism on TPU).
+
+One logical lookup = one HBM row DMA (the Q row) + one VMEM LUT read (the R
+row).  The naive QR implementation costs two HBM gathers per lookup; pinning
+the small shared table in VMEM removes the second one — this kernel *is* the
+"shared-table-in-PIM-SRAM" idea expressed in the TPU memory hierarchy:
+
+* ``r_lut``   — whole R table mapped into VMEM once (BlockSpec index_map is
+  constant), persisting across all grid steps: the SRAM LUT;
+* ``q_table`` — stays in HBM; each grid step DMAs exactly the row named by the
+  scalar-prefetched index (``PrefetchScalarGridSpec``), so the *indices run
+  ahead of the data* and Pallas double-buffers row ``i+1``'s DMA behind row
+  ``i``'s add: the proactive-prefetch analogue;
+* the reconstruction add runs on the VPU between DMAs — GnR "in memory".
+
+Grid: one step per lookup row, a second grid dim tiles wide embedding dims so
+the VMEM working set stays bounded and lanes stay 128-aligned on hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Lane-dim tile for wide embeddings; must divide dim or equal dim.
+DEFAULT_DIM_BLOCK = 512
+
+
+def _kernel(q_idx_ref, r_idx_ref, q_row_ref, r_lut_ref, out_ref):
+    n = pl.program_id(0)
+    r = r_idx_ref[n]
+    out_ref[...] = q_row_ref[...] + r_lut_ref[r, :][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dim_block", "interpret")
+)
+def qr_gather(
+    q_table: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    r_idx: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[n, :] = q_table[q_idx[n], :] + r_lut[r_idx[n], :].
+
+    q_table: (Q, D) float; r_lut: (C, D) same dtype; q_idx/r_idx: (N,) int32.
+    """
+    n = q_idx.shape[0]
+    dim = q_table.shape[1]
+    bd = dim_block or min(dim, DEFAULT_DIM_BLOCK)
+    assert dim % bd == 0, f"dim {dim} not divisible by dim_block {bd}"
+
+    grid = (n, dim // bd)
+    kernel = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # q_idx, r_idx ride in SMEM ahead of DMAs
+            grid=grid,
+            in_specs=[
+                # One Q row per step, DMA'd from HBM by prefetched index.
+                pl.BlockSpec((1, bd), lambda i, j, qi, ri: (qi[i], j)),
+                # The LUT: same block every step -> stays resident in VMEM.
+                pl.BlockSpec((r_lut.shape[0], bd), lambda i, j, qi, ri: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bd), lambda i, j, qi, ri: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, dim), q_table.dtype),
+        interpret=interpret,
+    )
+    return kernel(q_idx.astype(jnp.int32), r_idx.astype(jnp.int32), q_table, r_lut)

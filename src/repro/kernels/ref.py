@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; these are the
+ground truth, kept deliberately naive.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qr_lookup_ref(
+    q_table: jax.Array, r_lut: jax.Array, q_idx: jax.Array, r_idx: jax.Array
+) -> jax.Array:
+    """Fused QR reconstruction: out[n] = Q[q_idx[n]] + R[r_idx[n]]."""
+    return q_table[q_idx] + r_lut[r_idx]
+
+
+def gnr_bag_ref(
+    q_table: jax.Array, r_lut: jax.Array, q_idx: jax.Array, r_idx: jax.Array
+) -> jax.Array:
+    """Pooled QR bag: out[b] = Σ_k ( Q[q_idx[b,k]] + R[r_idx[b,k]] ).
+
+    Accumulation in fp32 regardless of table dtype (kernel matches this).
+    """
+    rows = (q_table[q_idx].astype(jnp.float32) + r_lut[r_idx].astype(jnp.float32))
+    return rows.sum(axis=-2).astype(q_table.dtype)
+
+
+def dense_bag_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Pooled dense bag: out[b] = Σ_k T[idx[b,k]] (fp32 accumulation)."""
+    return table[idx].astype(jnp.float32).sum(axis=-2).astype(table.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Naive full-matrix attention oracle with GQA (fp32 softmax)."""
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q * d ** -0.5, kk).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vv)

@@ -1,0 +1,473 @@
+"""Loop-aware analysis of post-SPMD HLO text: FLOPs, HBM bytes, collectives.
+
+Why not ``compiled.cost_analysis()``: XLA's aggregate counts each while-loop
+*body once*, but a scan-over-layers model executes the body ``num_layers``
+times — the aggregate under-counts a 94-layer model by ~94x.  This analyzer
+parses the optimized (post-partitioning, per-device) HLO text, reads each
+loop's ``known_trip_count`` from ``backend_config``, and propagates costs
+through the call graph, so the totals reflect what one device actually
+executes per step.
+
+Cost model (documented in EXPERIMENTS.md §Roofline methodology):
+
+* FLOPs — 2 x prod(result dims) x contracted size, summed over every ``dot``
+  (including dots inside fusion bodies), x loop multipliers.  Elementwise
+  FLOPs are ignored (<1% for these models, and the MXU roofline is what the
+  compute term measures).
+* HBM bytes — per instruction: result + operand bytes, for ops that move
+  data (fusions, dots, copies, converts, reduces, collectives, ...).
+  Gather/dynamic-slice traffic counts *touched rows* (2 x result + indices),
+  not the whole table operand — critical for embedding workloads; a fusion
+  parameter consumed only by a gather inside the fusion body gets the same
+  discount.  ``broadcast``/``iota``/``reshape``/``bitcast`` and tuple
+  plumbing are free (fused on TPU).
+* Collectives — per kind: op count, summed operand bytes (the spec's
+  ``collective_bytes``), and ring-algorithm effective per-chip wire bytes
+  using the parsed replica-group size g:
+      all-reduce 2B(g-1)/g | all-gather B(g-1) | reduce-scatter B(g-1)/g |
+      all-to-all B(g-1)/g  | collective-permute B.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+_TYPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+_NAME_RE = re.compile(r"%[\w.\-]+")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_DIMS_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Ops that are free (layout/tuple plumbing, or fused away on TPU).
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "opt-barrier", "custom-call",
+}
+
+
+def _parse_dims(s: str) -> tuple[int, ...]:
+    return tuple(int(d) for d in s.split(",") if d) if s else ()
+
+
+def _parse_result_types(text: str) -> tuple[list[tuple[str, tuple[int, ...]]], int]:
+    """Parse leading type or tuple-of-types; return (list of (dtype, dims), end)."""
+    text = text.lstrip()
+    if text.startswith("("):
+        out = []
+        pos = 1
+        while pos < len(text) and text[pos] != ")":
+            m = _TYPE_RE.match(text, pos)
+            if not m:
+                # skip /*index=N*/ comments and separators
+                nxt = pos + 1
+                while nxt < len(text) and text[nxt] not in ")%bfsupt":
+                    nxt += 1
+                if text[pos] in ", /*0123456789=":
+                    pos += 1
+                    continue
+                m2 = _TYPE_RE.search(text, pos)
+                if not m2 or m2.start() > text.find(")", pos):
+                    break
+                m = m2
+            out.append((m.group(1), _parse_dims(m.group(2))))
+            pos = m.end()
+        end = text.find(")", pos) + 1
+        return out, end
+    m = _TYPE_RE.match(text)
+    if not m:
+        return [], 0
+    return [(m.group(1), _parse_dims(m.group(2)))], m.end()
+
+
+def _types_bytes(types: list[tuple[str, tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, dims in types:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    types: list                     # [(dtype, dims), ...]
+    operands: list[str]
+    attrs: str
+    opregion: str = ""              # raw text inside the op's parens
+    is_root: bool = False
+
+    @property
+    def bytes(self) -> int:
+        return _types_bytes(self.types)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: dict
+    root: str = ""
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for raw in text.splitlines():
+        m = _COMP_START.match(raw)
+        if m:
+            current = Computation(m.group(1), {})
+            comps[current.name] = current
+            continue
+        if raw.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        mi = _INSTR_RE.match(raw)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        is_root = raw.lstrip().startswith("ROOT ")
+        types, end = _parse_result_types(rhs)
+        rest = rhs[end:].lstrip()
+        mo = re.match(r"([\w\-]+)", rest)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        # operand region: balanced parens after opcode
+        p0 = rest.find("(", mo.end())
+        operands: list[str] = []
+        attrs = ""
+        opregion = ""
+        if p0 >= 0:
+            depth, i = 0, p0
+            while i < len(rest):
+                if rest[i] == "(":
+                    depth += 1
+                elif rest[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                i += 1
+            opregion = rest[p0: i + 1]
+            operands = _NAME_RE.findall(opregion)
+            attrs = rest[i + 1:]
+        current.instrs[name] = Instr(
+            name, opcode, types, operands, attrs, opregion, is_root
+        )
+        if is_root:
+            current.root = name
+    return comps
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    m = _GROUPS_V2_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_RING_FACTOR = {
+    "all-reduce": lambda b, g: 2.0 * b * (g - 1) / max(g, 1),
+    "all-gather": lambda b, g: 1.0 * b * (g - 1),
+    "reduce-scatter": lambda b, g: 1.0 * b * (g - 1) / max(g, 1),
+    "all-to-all": lambda b, g: 1.0 * b * (g - 1) / max(g, 1),
+    "collective-permute": lambda b, g: 1.0 * b,
+}
+
+
+def _zero_cost() -> dict:
+    return {
+        "flops": 0.0,
+        "bytes": 0.0,
+        "coll_bytes": {k: 0.0 for k in COLLECTIVE_KINDS},
+        "coll_wire": {k: 0.0 for k in COLLECTIVE_KINDS},
+        "coll_counts": {k: 0 for k in COLLECTIVE_KINDS},
+        "dots": {},                 # "MxNxK sig" -> flops (for perf logs)
+        "unknown_loops": 0,
+    }
+
+
+def _acc(dst: dict, src: dict, mult: float = 1.0) -> None:
+    dst["flops"] += src["flops"] * mult
+    dst["bytes"] += src["bytes"] * mult
+    for k in COLLECTIVE_KINDS:
+        dst["coll_bytes"][k] += src["coll_bytes"][k] * mult
+        dst["coll_wire"][k] += src["coll_wire"][k] * mult
+        dst["coll_counts"][k] += int(src["coll_counts"][k] * mult)
+    for sig, f in src["dots"].items():
+        dst["dots"][sig] = dst["dots"].get(sig, 0.0) + f * mult
+    dst["unknown_loops"] += src["unknown_loops"]
+
+
+def _operand_bytes(comp: Computation, names: list[str]) -> int:
+    return sum(comp.instrs[n.lstrip("%")].bytes for n in names if n.lstrip("%") in comp.instrs)
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = 1
+    for _, dims in ins.types:
+        for d in dims:
+            out_elems *= d
+    contract = 1
+    m = _LHS_CONTRACT_RE.search(ins.attrs)
+    lhs = ins.operands[0].lstrip("%") if ins.operands else None
+    if m and lhs and lhs in comp.instrs:
+        ldims = comp.instrs[lhs].types[0][1]
+        for di in _parse_dims(m.group(1)):
+            if di < len(ldims):
+                contract *= ldims[di]
+    return 2.0 * out_elems * contract
+
+
+def _param_indices(body: Computation) -> dict[str, int]:
+    out = {}
+    for ins in body.instrs.values():
+        if ins.opcode == "parameter":
+            m = re.search(r"\((\d+)\)", ins.opregion or "")
+            if m:
+                out[ins.name] = int(m.group(1))
+    return out
+
+
+def _gather_param_indices(comps: dict, fusion_body: str) -> dict[int, int]:
+    """Fusion params consumed ONLY as the gathered operand of gather/d-slice,
+    mapped to the touched-bytes bound (2 x the slice/gather results reading
+    them — read once, conservatively doubled for write-allocate)."""
+    body = comps.get(fusion_body)
+    if body is None:
+        return {}
+    param_idx = _param_indices(body)
+    uses: dict[str, list[tuple[str, int, int]]] = {}
+    for ins in body.instrs.values():
+        for j, op in enumerate(ins.operands):
+            uses.setdefault(op.lstrip("%"), []).append((ins.opcode, j, ins.bytes))
+    out: dict[int, int] = {}
+    for pname, idx in param_idx.items():
+        ulist = uses.get(pname, [])
+        if ulist and all(
+            (op in ("gather", "dynamic-slice") and j == 0) for op, j, _ in ulist
+        ):
+            out[idx] = 2 * sum(b for _, _, b in ulist)
+    return out
+
+
+def _dus_root_info(comps: dict, fusion_body: str) -> tuple[int, int] | None:
+    """(aliased buffer param index, update bytes) for fusions whose root is a
+    dynamic-update-slice into a parameter (loop-carried stacked buffers).
+
+    Such fusions write only the update region in place; counting the whole
+    buffer as read+written would overstate traffic by ~num_layers x.
+    """
+    body = comps.get(fusion_body)
+    if body is None or not body.root:
+        return None
+    ins = body.instrs.get(body.root)
+    # allow a trailing bitcast/convert chain above the DUS
+    for _ in range(3):
+        if ins is None:
+            return None
+        if ins.opcode == "dynamic-update-slice":
+            break
+        if ins.opcode in ("bitcast", "convert", "copy") and ins.operands:
+            ins = body.instrs.get(ins.operands[0].lstrip("%"))
+        else:
+            return None
+    if ins is None or ins.opcode != "dynamic-update-slice":
+        return None
+    param_idx = _param_indices(body)
+    # resolve operand 0 (the buffer) through bitcast/convert to a parameter
+    # (the convert would not exist on TPU — bf16 buffers DUS in place)
+    buf = ins.operands[0].lstrip("%")
+    for _ in range(4):
+        bi = body.instrs.get(buf)
+        if bi is None:
+            return None
+        if bi.opcode == "parameter":
+            break
+        if bi.opcode in ("bitcast", "copy", "convert") and bi.operands:
+            buf = bi.operands[0].lstrip("%")
+        else:
+            return None
+    if buf not in param_idx:
+        return None
+    upd = body.instrs.get(ins.operands[1].lstrip("%")) if len(ins.operands) > 1 else None
+    upd_bytes = upd.bytes if upd is not None else 0
+    return param_idx[buf], upd_bytes
+
+
+def _comp_multipliers(comps: dict, entry: str) -> tuple[dict, int]:
+    """Dynamic execution count per computation (loop trips propagate down)."""
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    unknown = 0
+    # topo order: callees appear before callers in HLO text, so walk reversed
+    order = list(comps)
+    order.reverse()                       # entry (last) first
+    # safer: iterate until fixpoint (call graph is a DAG; depth is small)
+    for _ in range(64):
+        changed = False
+        for name, comp in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs.values():
+                if ins.opcode == "while":
+                    mt = _TRIP_RE.search(ins.attrs)
+                    trip = int(mt.group(1)) if mt else 1
+                    if not mt:
+                        unknown += 1
+                    mb = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                    if mb and mb.group(1) in comps:
+                        want = m * trip
+                        if mult[mb.group(1)] < want:
+                            mult[mb.group(1)] = want
+                            changed = True
+                elif ins.opcode == "conditional":
+                    for b in re.findall(r"%([\w.\-]+)", ins.attrs):
+                        if b in comps and mult[b] < m:
+                            mult[b] = m
+                            changed = True
+                elif ins.opcode == "call":
+                    mc = re.search(r"to_apply=%([\w.\-]+)", ins.attrs)
+                    if mc and mc.group(1) in comps and mult[mc.group(1)] < m:
+                        mult[mc.group(1)] = m
+                        changed = True
+        if not changed:
+            break
+    return mult, unknown
+
+
+def analyze(text: str, *, entry: str | None = None, top_k: int = 12) -> dict:
+    comps = parse_hlo(text)
+    # entry = computation named main* (jax convention) or the last one
+    if entry is None:
+        cands = [n for n in comps if n.startswith("main")]
+        entry = cands[0] if cands else list(comps)[-1]
+
+    mult, unknown = _comp_multipliers(comps, entry)
+    total = _zero_cost()
+    total["unknown_loops"] = unknown
+    traffic: list[tuple[float, str, str]] = []   # (bytes, opcode, where)
+    bytes_by_op: dict[str, float] = {}
+
+    def add_bytes(b: float, op: str, where: str) -> None:
+        total["bytes"] += b
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + b
+        traffic.append((b, op, where))
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            if op in _FREE_OPS or op in ("while", "conditional", "call"):
+                continue
+            where = f"{cname}/{ins.name}"
+            if op == "fusion":
+                mc = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+                body = mc.group(1) if mc else None
+                gparams = _gather_param_indices(comps, body) if body else {}
+                dus = _dus_root_info(comps, body) if body else None
+                if dus is not None:
+                    buf_idx, upd_bytes = dus
+                    b = 2 * upd_bytes                 # in-place update traffic
+                else:
+                    buf_idx = -1
+                    b = ins.bytes
+                for j, opn in enumerate(ins.operands):
+                    if j == buf_idx:
+                        continue                      # aliased buffer, not read
+                    ob = _operand_bytes(comp, [opn])
+                    if j in gparams:
+                        ob = min(ob, gparams[j])      # touched-rows model
+                    b += ob
+                add_bytes(b * m, "fusion", where)
+                # dots fused into the body still cost MXU flops
+                if body and body in comps and mult.get(body, 0.0) == 0.0:
+                    for bi in comps[body].instrs.values():
+                        if bi.opcode == "dot":
+                            f = _dot_flops(comps[body], bi) * m
+                            total["flops"] += f
+                            sig = "x".join(str(d) for d in bi.types[0][1])
+                            total["dots"][sig] = total["dots"].get(sig, 0.0) + f
+                continue
+            if op == "dot":
+                f = _dot_flops(comp, ins) * m
+                total["flops"] += f
+                sig = "x".join(str(d) for d in ins.types[0][1]) or "scalar"
+                total["dots"][sig] = total["dots"].get(sig, 0.0) + f
+                add_bytes((ins.bytes + _operand_bytes(comp, ins.operands)) * m,
+                          "dot", where)
+                continue
+            base = op.removesuffix("-start")
+            if base in COLLECTIVE_KINDS:
+                if op.endswith("-done"):
+                    continue
+                ob = _operand_bytes(comp, ins.operands) or ins.bytes
+                g = _group_size(ins.attrs)
+                total["coll_bytes"][base] += ob * m
+                total["coll_wire"][base] += _RING_FACTOR[base](ob, g) * m
+                total["coll_counts"][base] += int(m)
+                add_bytes((ins.bytes + ob) * m, base, where)
+                continue
+            if op in ("gather", "dynamic-slice"):
+                idx_b = _operand_bytes(comp, ins.operands[1:])
+                add_bytes((2 * ins.bytes + idx_b) * m, op, where)
+                continue
+            if op == "dynamic-update-slice":
+                upd = _operand_bytes(comp, ins.operands[1:2])
+                add_bytes((2 * upd + _operand_bytes(comp, ins.operands[2:])) * m,
+                          op, where)
+                continue
+            if op.startswith("scatter"):
+                upd = _operand_bytes(comp, ins.operands[2:3])
+                add_bytes(
+                    (3 * upd + _operand_bytes(comp, ins.operands[1:2])) * m, op, where
+                )
+                continue
+            # default: real data movement (copy/convert/reduce/select/...)
+            add_bytes((ins.bytes + _operand_bytes(comp, ins.operands)) * m, op, where)
+
+    traffic.sort(key=lambda t: -t[0])
+    top_dots = sorted(total["dots"].items(), key=lambda kv: -kv[1])[:top_k]
+    return {
+        "flops": total["flops"],
+        "bytes": total["bytes"],
+        "coll_bytes": total["coll_bytes"],
+        "coll_wire": total["coll_wire"],
+        "coll_counts": total["coll_counts"],
+        "coll_bytes_total": sum(total["coll_bytes"].values()),
+        "coll_wire_total": sum(total["coll_wire"].values()),
+        "top_dots": [{"shape": s, "flops": f} for s, f in top_dots],
+        "bytes_by_op": {
+            k: v for k, v in sorted(bytes_by_op.items(), key=lambda kv: -kv[1])
+        },
+        "top_traffic": [
+            {"bytes": b, "op": o, "where": w} for b, o, w in traffic[:top_k]
+        ],
+        "unknown_loops": total["unknown_loops"],
+        "entry": entry,
+    }

@@ -1,0 +1,55 @@
+"""Batched serving driver: prefill a prompt batch, decode greedily.
+
+Usage (CPU smoke):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 32 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.train.serve_step import greedy_generate, serve_family
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--embedding", default=None, choices=[None, "dense", "hashed", "qr"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    binding = registry.get(args.arch)
+    cfg = binding.smoke if args.smoke else binding.config
+    if args.embedding:
+        cfg = cfg.replace(embedding_kind=args.embedding)
+    init = registry.init_fn(binding)
+    params, _ = init(jax.random.PRNGKey(args.seed), cfg)
+    make_batch = registry.make_batch_fn(binding, cfg)
+    batch = make_batch(args.batch, args.prompt_len, seed=args.seed, step=0)
+
+    fam = serve_family(binding.kind)
+    max_len = args.prompt_len + args.max_new
+
+    t0 = time.time()
+    out = greedy_generate(
+        fam, params, batch, cfg, max_new=args.max_new, max_len=max_len
+    )
+    dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"generated {out.shape} in {dt:.2f}s ({toks / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", out[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,201 @@
+"""DLRM — the paper's own model family (CTR prediction).
+
+Architecture (Naumov et al. '19): dense features → bottom-MLP; sparse features
+→ per-table embedding-bag GnR; pairwise-dot feature interaction; top-MLP →
+CTR logit.  The embedding layer is where the paper's technique lives: tables
+are weight-shared (QR), served by the two-level sharded GnR with the
+VMEM-pinned R LUT, and the memory-bound GnR branch is structured to overlap
+the compute-bound bottom-MLP (the PIM-runs-beside-the-host analogue).
+
+Distribution: tables row-sharded over `model` ("bank groups"), requests over
+`data`; the only `model`-axis collective is one psum of pooled vectors.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import embedding_bag, qr_embedding
+from repro.core.embedding_bag import BagConfig
+from repro.core.overlap import parallel_branches
+from repro.core.qr_embedding import EmbeddingConfig
+from repro.distributed import sharding
+from repro.models.layers import _normal
+
+
+def make_bags(cfg: DLRMConfig) -> list[BagConfig]:
+    emb = EmbeddingConfig(
+        vocab=cfg.vocab_per_table,
+        dim=cfg.dim,
+        kind=cfg.embedding_kind,  # type: ignore[arg-type]
+        collision=cfg.qr_collision,
+        param_dtype=cfg.pdtype,
+        compute_dtype=cfg.cdtype,
+    )
+    return [BagConfig(emb=emb, pooling=cfg.pooling) for _ in range(cfg.num_tables)]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, dims: tuple[int, ...], in_dim: int, dtype):
+    params, axes = [], []
+    d = in_dim
+    keys = jax.random.split(key, len(dims))
+    for k, out in zip(keys, dims):
+        params.append(
+            {
+                "w": _normal(k, (d, out), dtype, 1.0 / math.sqrt(d)),
+                "b": jnp.zeros((out,), dtype),
+            }
+        )
+        axes.append({"w": ("mlp", "mlp"), "b": ("mlp",)})
+        d = out
+    return params, axes
+
+
+def _mlp_fwd(params, x, compute_dtype, *, final_linear=True):
+    for i, p in enumerate(params):
+        x = x.astype(compute_dtype) @ p["w"].astype(compute_dtype) + p["b"].astype(
+            compute_dtype
+        )
+        last = i == len(params) - 1
+        if not (last and final_linear):
+            x = jax.nn.relu(x)
+    return x
+
+
+def num_interactions(cfg: DLRMConfig) -> int:
+    f = cfg.num_tables + 1
+    return f * (f - 1) // 2
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    kb, kt, ke = jax.random.split(key, 3)
+    bags = make_bags(cfg)
+    params, axes = {}, {}
+    params["bottom"], axes["bottom"] = _init_mlp(
+        kb, cfg.bottom_mlp, cfg.num_dense, cfg.pdtype
+    )
+    top_in = cfg.bottom_mlp[-1] + num_interactions(cfg)
+    params["top"], axes["top"] = _init_mlp(kt, cfg.top_mlp, top_in, cfg.pdtype)
+    params["tables"] = embedding_bag.init_tables(ke, bags)
+    axes["tables"] = embedding_bag.table_axes(bags)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# sharded GnR dispatch (two-level scheme when a mesh is active)
+# ---------------------------------------------------------------------------
+
+def _gnr(tables, idx, bags, cfg: DLRMConfig):
+    """(B, T, pooling) indices -> (B, T, dim) pooled, two-level under a mesh."""
+    mesh = sharding.current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return embedding_bag.multi_bag_lookup(tables, idx, bags)
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import sharded_embedding as SE
+
+    row_axis = "model"
+    batch_spec = sharding.spec_for(("batch",))[0]
+    nsh = mesh.shape[row_axis]
+    plans = [SE.ShardPlan(b.emb, nsh) for b in bags]
+
+    def local_fn(tabs, indices):
+        outs = []
+        for t, (bag, plan) in enumerate(zip(bags, plans)):
+            p = tabs[t]
+            if bag.emb.kind == "qr":
+                part = SE.qr_bag_partial(p["q"], p["r"], indices[:, t], plan, axis=row_axis)
+            else:
+                part = SE.dense_bag_partial(p["table"], indices[:, t], plan, axis=row_axis)
+            outs.append(part)
+        return jax.lax.psum(jnp.stack(outs, axis=1), row_axis)
+
+    def tspec(bag):
+        if bag.emb.kind == "qr":
+            return {"q": P(row_axis, None), "r": P()}
+        return {"table": P(row_axis, None)}
+
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=([tspec(b) for b in bags], P(batch_spec, None, None)),
+        out_specs=P(batch_spec, None, None),
+        check_vma=False,
+    )(tables, idx)
+
+
+def pad_tables_for_mesh(params, cfg: DLRMConfig, num_shards: int):
+    """Pad Q/dense tables so the `model` axis divides rows (dry-run helper)."""
+    from repro.core import sharded_embedding as SE
+
+    bags = make_bags(cfg)
+    out = []
+    for t, bag in zip(params["tables"], bags):
+        if "q" in t:
+            out.append({"q": SE.pad_q_table(t["q"], bag.emb), "r": t["r"]})
+        else:
+            out.append({"table": SE.pad_q_table(t["table"], bag.emb)})
+    return {**params, "tables": out}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def interact(bottom: jax.Array, pooled: jax.Array) -> jax.Array:
+    """Pairwise-dot interaction. bottom: (B, dim); pooled: (B, T, dim)."""
+    feats = jnp.concatenate([bottom[:, None, :], pooled], axis=1)  # (B, F, dim)
+    gram = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return gram[:, iu, ju]  # (B, F*(F-1)/2)
+
+
+def forward_dlrm(params, dense: jax.Array, idx: jax.Array, cfg: DLRMConfig) -> jax.Array:
+    """dense: (B, num_dense) fp; idx: (B, T, pooling) int32 -> CTR logits (B,).
+
+    The two branches are evaluated with no artificial dependency so XLA's
+    scheduler may overlap the memory/ICI-bound GnR with the MXU-bound MLP.
+    """
+    bags = make_bags(cfg)
+    bottom, pooled = parallel_branches(
+        lambda d: _mlp_fwd(params["bottom"], d, cfg.cdtype, final_linear=False),
+        lambda t, i: _gnr(t, i, bags, cfg),
+        (dense,),
+        (params["tables"], idx),
+    )
+    bottom = sharding.constrain(bottom, "batch", None)
+    pooled = sharding.constrain(pooled, "batch", None, None)
+    z = interact(bottom.astype(cfg.cdtype), pooled.astype(cfg.cdtype))
+    top_in = jnp.concatenate([bottom, z], axis=-1)
+    logit = _mlp_fwd(params["top"], top_in, cfg.cdtype)[:, 0]
+    return logit.astype(jnp.float32)
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Binary cross-entropy with logits (labels in {0, 1})."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def auc(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Rank-based AUC (Mann–Whitney). Used by the model-quality benchmarks."""
+    order = jnp.argsort(logits)
+    ranks = jnp.empty_like(order).at[order].set(jnp.arange(1, logits.size + 1))
+    pos = labels > 0.5
+    n_pos = pos.sum()
+    n_neg = labels.size - n_pos
+    sum_pos = jnp.where(pos, ranks, 0).sum()
+    return (sum_pos - n_pos * (n_pos + 1) / 2) / jnp.maximum(n_pos * n_neg, 1)

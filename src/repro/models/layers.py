@@ -1,0 +1,358 @@
+"""Shared layers: norms, RoPE, GQA attention (flash-style), MLPs.
+
+Conventions
+-----------
+* every ``init_*`` returns ``(params, axes)`` — parallel pytrees of arrays and
+  logical-axis tuples (resolved by ``repro.distributed.sharding``);
+* activations flow in ``cfg.cdtype`` (bf16), softmax/normalizers in fp32;
+* attention never materializes (S, S): training/prefill use a blockwise
+  online-softmax (flash) formulation written in lax.scan so XLA keeps the
+  working set at (block_q, block_kv).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_dense(key, in_dim, out_dim, axes, *, dtype, bias=False, scale=None):
+    scale = (1.0 / math.sqrt(in_dim)) if scale is None else scale
+    p = {"w": _normal(key, (in_dim, out_dim), dtype, scale)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (axes[-1],)
+    return p, a
+
+
+def dense(p, x, compute_dtype):
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind, dim, dtype):
+    if kind == "rms":
+        return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("embed",)}
+    return (
+        {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def apply_norm(p, x, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x, scale):
+    """Per-head q/k norm (qwen3)."""
+    xf = x.astype(jnp.float32)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float, partial_factor: float = 1.0):
+    """Rotate-half RoPE on the last dim. x: (..., S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    rot = int(d * partial_factor)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    # broadcast ang over head axis: x is (..., S, D) where leading dims may
+    # include batch/heads; positions aligns with the S axis.
+    while ang.ndim < x_rot.ndim:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# flash-style blockwise attention (pure jnp/lax; differentiable)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _fit_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (block-shape fitting)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _attn_block(q, k, v, m_prev, l_prev, acc_prev, *, bias, p_dtype=None):
+    """One online-softmax update. q:(...,Bq,D) k/v:(...,Bk,D).
+
+    ``p_dtype=bf16`` stores the probability tile in bf16 (the row-sum
+    normalizer upcasts back to f32) — the (Bq, Bk) tiles are the dominant HBM
+    traffic of blockwise attention when XLA materializes them, and bf16
+    halves it; the AV matmul consumes bf16 anyway. ~1e-3 relative error on
+    the normalizer (§Perf hillclimb knob `flash_block_dtype`).
+    """
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32)
+    if bias is not None:
+        s = s + bias
+    m = jnp.maximum(m_prev, s.max(-1))
+    corr = jnp.exp(m_prev - m)
+    if p_dtype is not None:
+        p = jnp.exp(s - m[..., None]).astype(p_dtype)
+        l = l_prev * corr + p.astype(jnp.float32).sum(-1)
+    else:
+        p = jnp.exp(s - m[..., None])
+        l = l_prev * corr + p.sum(-1)
+    acc = acc_prev * corr[..., None] + jnp.einsum(
+        "...qk,...kd->...qd", p.astype(v.dtype), v
+    ).astype(jnp.float32)
+    return m, l, acc
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    scale: float | None = None,
+    p_dtype=None,
+) -> jax.Array:
+    """Blockwise attention. q: (B, H, Sq, D); k/v: (B, KH, Skv, D). GQA via KH|H.
+
+    Never materializes (Sq, Skv); scans KV blocks inside a scan over Q blocks.
+    """
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    q = (q * scale).reshape(b, kh, g, sq, d)
+
+    q_block = _fit_block(sq, q_block)
+    kv_block = _fit_block(skv, kv_block)
+    nq, nk = sq // q_block, skv // kv_block
+
+    qb = q.reshape(b, kh, g, nq, q_block, d).transpose(3, 0, 1, 2, 4, 5)
+    kb = k.reshape(b, kh, nk, kv_block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, kh, nk, kv_block, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qtile = qi_q
+        m0 = jnp.full((b, kh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_block, d), jnp.float32)
+
+        def kv_step(carry, ki_kv):
+            ki, ktile, vtile = ki_kv
+            m, l, acc = carry
+            if causal:
+                qpos = qi * q_block + jnp.arange(q_block)
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                bias = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+            else:
+                bias = None
+            m, l, acc = _attn_block(
+                qtile, ktile[:, :, None], vtile[:, :, None], m, l, acc, bias=bias,
+                p_dtype=p_dtype,
+            )
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # outs: (nq, b, kh, g, q_block, d) -> (b, h, sq, d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, d)
+    return out
+
+
+def decode_attention(q, k, v, pos, *, scale=None):
+    """Single-token attention vs a cache. q: (B,H,1,D); k/v: (B,KH,S,D).
+
+    Masks cache positions > ``pos`` (scalar current position).
+    """
+    b, h, _, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    qg = (q * scale).reshape(b, kh, g, d)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k).astype(jnp.float32)
+    mask = jnp.arange(s) <= pos
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v.dtype), v)
+    return out.reshape(b, h, 1, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, cross=False):
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kh = cfg.num_heads, cfg.kv_heads
+    ks = jax.random.split(key, 5)
+    params, axes = {}, {}
+    params["wq"], axes["wq"] = init_dense(
+        ks[0], d, h * hd, ("embed", "heads"), dtype=cfg.pdtype, bias=cfg.qkv_bias
+    )
+    params["wk"], axes["wk"] = init_dense(
+        ks[1], d, kh * hd, ("embed", "kv_heads"), dtype=cfg.pdtype, bias=cfg.qkv_bias
+    )
+    params["wv"], axes["wv"] = init_dense(
+        ks[2], d, kh * hd, ("embed", "kv_heads"), dtype=cfg.pdtype, bias=cfg.qkv_bias
+    )
+    params["wo"], axes["wo"] = init_dense(
+        ks[3], h * hd, d, ("heads", "embed"), dtype=cfg.pdtype,
+        scale=1.0 / math.sqrt(h * hd * 2 * max(cfg.num_layers, 1)),
+    )
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), cfg.pdtype)
+        params["k_norm"] = jnp.ones((hd,), cfg.pdtype)
+        axes["q_norm"] = ("head_dim",)
+        axes["k_norm"] = ("head_dim",)
+    return params, axes
+
+
+def attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    causal=True,
+    use_rope=True,
+    positions=None,
+    kv_src=None,
+    cache=None,
+    pos=None,
+):
+    """GQA attention.
+
+    * train/prefill: ``cache is None`` — full-sequence flash attention; returns
+      (y, (k, v)) so prefill can build the cache.
+    * decode: ``cache = (k_cache, v_cache)`` (B, S, KH, D) and scalar ``pos`` —
+      one-token update; returns (y, updated_cache).
+    * cross-attention: ``kv_src`` supplies the encoder output.
+    """
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.kv_heads, cfg.head_dim_
+    cd = cfg.cdtype
+
+    q = dense(p["wq"], x, cd).reshape(b, s, h, hd)
+    src = x if kv_src is None else kv_src
+    k = dense(p["wk"], src, cd).reshape(b, src.shape[1], kh, hd)
+    v = dense(p["wv"], src, cd).reshape(b, src.shape[1], kh, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, p["q_norm"])
+        k = rms_norm_headwise(k, p["k_norm"])
+
+    if use_rope and kv_src is None:
+        if positions is None:
+            positions = jnp.arange(s) if pos is None else (pos + jnp.zeros((s,), jnp.int32))
+        q = rope(q.swapaxes(1, 2), positions, theta=cfg.rope_theta,
+                 partial_factor=cfg.partial_rotary).swapaxes(1, 2)
+        k = rope(k.swapaxes(1, 2), positions, theta=cfg.rope_theta,
+                 partial_factor=cfg.partial_rotary).swapaxes(1, 2)
+
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+
+    if cache is not None:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        k_cache = constrain(k_cache, "batch", "kvseq", "kv_heads", "head_dim")
+        v_cache = constrain(v_cache, "batch", "kvseq", "kv_heads", "head_dim")
+        y = decode_attention(
+            q.transpose(0, 2, 1, 3),
+            k_cache.transpose(0, 2, 1, 3).astype(cd),
+            v_cache.transpose(0, 2, 1, 3).astype(cd),
+            pos,
+        )
+        y = y.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+        out = dense(p["wo"], y, cd)
+        return out, (k_cache, v_cache)
+
+    y = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal and kv_src is None,
+        p_dtype=jnp.bfloat16 if cfg.flash_block_dtype == "bf16" else None,
+    )
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    out = dense(p["wo"], y, cd)
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, *, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params, axes = {}, {}
+    gated = cfg.activation == "silu"
+    params["w_up"], axes["w_up"] = init_dense(ks[0], d, f, ("embed", "ffn"), dtype=cfg.pdtype)
+    if gated:
+        params["w_gate"], axes["w_gate"] = init_dense(ks[1], d, f, ("embed", "ffn"), dtype=cfg.pdtype)
+    params["w_down"], axes["w_down"] = init_dense(
+        ks[2], f, d, ("ffn", "embed"), dtype=cfg.pdtype,
+        scale=1.0 / math.sqrt(f * 2 * max(cfg.num_layers, 1)),
+    )
+    return params, axes
+
+
+def mlp(p, x, cfg: ModelConfig):
+    cd = cfg.cdtype
+    up = dense(p["w_up"], x, cd)
+    up = constrain(up, "batch", "seq", "ffn")
+    if cfg.activation == "silu":
+        gate = dense(p["w_gate"], x, cd)
+        hcat = jax.nn.silu(gate) * up
+    elif cfg.activation == "relu2":
+        hcat = jnp.square(jax.nn.relu(up))
+    else:
+        hcat = jax.nn.gelu(up)
+    return dense(p["w_down"], hcat, cd)

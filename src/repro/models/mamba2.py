@@ -1,0 +1,229 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode. Sub-quadratic: cost is O(S · chunk) not O(S²), which is
+what qualifies the hybrid/ssm archs for the long_500k cell.
+
+Structure follows the SSD "minimal" algorithm (Dao & Gu 2024): within-chunk
+quadratic attention-like term + cross-chunk state passing via a scan.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import _normal
+
+CONV_WIDTH = 4
+CHUNK = 256
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def num_ssm_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, num_ssm_heads(cfg)
+    conv_dim = di + 2 * g * n
+    proj_out = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    params = {
+        "in_proj": _normal(ks[0], (d, proj_out), cfg.pdtype, scale),
+        "conv_w": _normal(ks[1], (CONV_WIDTH, conv_dim), cfg.pdtype, 0.5),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(cfg.pdtype),
+        "D": jnp.ones((h,), cfg.pdtype),
+        "dt_bias": jnp.zeros((h,), cfg.pdtype),
+        "norm_scale": jnp.ones((di,), cfg.pdtype),
+        "out_proj": _normal(ks[2], (di, d), cfg.pdtype,
+                            1.0 / math.sqrt(di * 2 * max(cfg.num_layers, 1))),
+    }
+    axes = {
+        "in_proj": ("embed", "ffn"),
+        "conv_w": (None, "ffn"),
+        "conv_b": ("ffn",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_scale": ("ffn",),
+        "out_proj": ("ffn", "embed"),
+    }
+    return params, axes
+
+
+def _segsum(a):
+    """a: (..., l) -> (..., l, l) with out[i, j] = sum_{k=j+1..i} a[k], -inf j>i."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, *, chunk=CHUNK, initial_state=None):
+    """SSD scan.
+
+    x: (B, S, H, P); a: (B, S, H) (= dt·A, negative); b, c: (B, S, G, N).
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    hpg = h // g
+
+    # chunked views
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)      # (B,H,C,L)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                               # (B,H,C,L)
+    L = jnp.exp(_segsum(ac))                                      # (B,H,C,L,L)
+
+    # broadcast groups to heads: head hh uses group hh // hpg
+    def expand_heads(t):  # (B,NC,L,G,N) -> (B,NC,L,H,N)
+        return jnp.repeat(t, hpg, axis=3)
+
+    bh = expand_heads(bc)
+    ch = expand_heads(cc)
+
+    # 1) within-chunk (diagonal blocks)
+    y_diag = jnp.einsum(
+        "bclhn,bcshn,bhcls,bcshp->bclhp", ch, bh, L.astype(ch.dtype), xc
+    )
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)               # (B,H,C,L)
+    states = jnp.einsum(
+        "bclhn,bhcl,bclhp->bchpn", bh, decay_states.astype(bh.dtype), xc
+    )
+
+    # 3) cross-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1]).transpose(0, 2, 1)      # (B,C,H)
+    init = (
+        jnp.zeros((bsz, h, p, n), x.dtype) if initial_state is None else initial_state
+    )
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                              # (B,H,P,N), (B,H)
+        new = st + dec[..., None, None].astype(st.dtype) * prev
+        return new, prev
+
+    stacked = states.transpose(1, 0, 2, 3, 4)                     # (C,B,H,P,N)
+    decs = chunk_decay.transpose(1, 0, 2)                         # (C,B,H)
+    final, prevs = jax.lax.scan(scan_fn, init, (stacked, decs))
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)                  # (B,C,H,P,N)
+
+    # 4) cross-chunk contribution
+    state_decay = jnp.exp(a_cum)                                  # (B,H,C,L)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bhcl->bclhp", ch, prev_states, state_decay.astype(ch.dtype)
+    )
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssd_step(state, x, a, b, c):
+    """One-token recurrence. state: (B,H,P,N); x: (B,H,P); a: (B,H); b,c: (B,G,N)."""
+    h = x.shape[1]
+    hpg = h // b.shape[1]
+    bh = jnp.repeat(b, hpg, axis=1)                               # (B,H,N)
+    ch = jnp.repeat(c, hpg, axis=1)
+    decay = jnp.exp(a)[..., None, None].astype(state.dtype)
+    new_state = state * decay + jnp.einsum("bhn,bhp->bhpn", bh, x)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_state)
+    return y, new_state
+
+
+def _split_proj(z, cfg: ModelConfig):
+    di = d_inner(cfg)
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, num_ssm_heads(cfg)
+    zs, xs, bs, cs, dts = jnp.split(
+        z, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1
+    )
+    return zs, xs, bs, cs, dts
+
+
+def _gated_norm(y, z, scale):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)).astype(jnp.float32)
+    var = (yf ** 2).mean(-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_fwd(p, u, cfg: ModelConfig, *, state=None, conv_state=None, decode=False):
+    """u: (B, S, d_model). If decode, S==1 and (state, conv_state) are required.
+
+    Returns (out, (state, conv_state)).
+    """
+    cd = cfg.cdtype
+    bsz, s, _ = u.shape
+    di = d_inner(cfg)
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, num_ssm_heads(cfg)
+    pdim = cfg.ssm_head_dim
+
+    z = u.astype(cd) @ p["in_proj"].astype(cd)
+    zs, xs, bs, cs, dts = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([xs, bs, cs], axis=-1)              # (B,S,conv_dim)
+
+    w = p["conv_w"].astype(cd)                                    # (W, conv_dim)
+    if decode:
+        # conv_state: (B, W-1, conv_dim) holding the last W-1 inputs
+        window = jnp.concatenate([conv_state.astype(cd), conv_in], axis=1)  # (B,W,conv)
+        conv_out = jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+        new_conv_state = window[:, 1:, :]
+    else:
+        pad = jnp.pad(conv_in, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+        conv_out = sum(
+            pad[:, i : i + s, :] * w[i][None, None, :] for i in range(CONV_WIDTH)
+        )
+        new_conv_state = pad[:, pad.shape[1] - (CONV_WIDTH - 1) :, :]
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(cd))
+
+    xs, bs, cs = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    x4 = xs.reshape(bsz, s, h, pdim)
+    b4 = bs.reshape(bsz, s, g, n)
+    c4 = cs.reshape(bsz, s, g, n)
+
+    dt = jax.nn.softplus(dts.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = (-jnp.exp(p["A_log"].astype(jnp.float32)))[None, None, :] * dt  # (B,S,H)
+
+    xdt = x4 * dt.astype(cd)[..., None]
+    if decode:
+        y, new_state = ssd_step(
+            state, xdt[:, 0], a[:, 0].astype(cd), b4[:, 0], c4[:, 0]
+        )
+        y = y[:, None]
+    else:
+        init = state if state is not None else None
+        y, new_state = ssd_chunked(xdt, a.astype(cd), b4, c4, initial_state=init)
+
+    y = y + x4 * p["D"].astype(cd)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = _gated_norm(y, zs, p["norm_scale"])
+    out = y @ p["out_proj"].astype(cd)
+    return constrain(out, "batch", "seq", "embed"), (new_state, new_conv_state)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    h, pdim, n = num_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    di = d_inner(cfg)
+    g = cfg.ssm_groups
+    conv_dim = di + 2 * g * n
+    return (
+        jnp.zeros((batch, h, pdim, n), dtype),
+        jnp.zeros((batch, CONV_WIDTH - 1, conv_dim), dtype),
+    )

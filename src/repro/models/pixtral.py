@@ -1,0 +1,84 @@
+"""Pixtral-12B backbone: Mistral-NeMo-style decoder with a vision prefix.
+
+Per the assignment the pixtral-ViT frontend is a STUB — ``input_specs``
+provides precomputed patch embeddings ``(B, NUM_PATCHES, d_model)`` (the
+vision-encoder + adapter output of the real model).  The multimodal sequence
+is ``[patches ; text tokens]`` with full causal attention over the whole
+sequence; logits are produced for the text positions.
+
+Decode: the patch prefix occupies cache slots ``[0, NUM_PATCHES)``; text
+decoding proceeds from position ``NUM_PATCHES + prompt_len`` with the standard
+one-token path, so serving reuses the transformer machinery unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+
+init_pixtral = T.init_lm          # same parameter structure as a decoder LM
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+
+
+def _remat_policy(cfg):
+    """None = recompute everything (min memory); 'dots' saves matmul outputs
+    (the standard MaxText-style policy: ~1/3 less recompute for ~1 activation
+    copy more memory)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return None
+
+
+def _with_prefix(params, patches, tokens, cfg: ModelConfig):
+    x_txt = T.embed_tokens(params, tokens, cfg).astype(cfg.cdtype)
+    x = jnp.concatenate([patches.astype(cfg.cdtype), x_txt], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def forward_train(params, patches, tokens, cfg: ModelConfig):
+    """patches: (B, P, d); tokens: (B, S) -> logits (B, S, vocab) for text."""
+    p_len = patches.shape[1]
+    x = _with_prefix(params, patches, tokens, cfg)
+
+    def body(carry, lp):
+        y, _ = T.layer_fwd(lp, carry, cfg)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x)
+    return T.lm_logits(params, x[:, p_len:, :], cfg)
+
+
+def forward_prefill(params, patches, tokens, cfg: ModelConfig, max_len: int):
+    """Prefill patches + prompt; cache covers max_len total positions."""
+    p_len = patches.shape[1]
+    b = tokens.shape[0]
+    x = _with_prefix(params, patches, tokens, cfg)
+
+    def body(carry, lp):
+        y, (k, v) = T.layer_fwd(lp, carry, cfg)
+        return y, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    pad = max_len - ks.shape[2]
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = L.apply_norm(params["final_norm"], x)
+    logits = T.lm_logits(params, x[:, -1:, :], cfg)
+    del b, p_len
+    return logits, {"k": ks, "v": vs}
+
+
+def forward_decode(params, token, cache, pos, cfg: ModelConfig):
+    """One text-token step; ``pos`` counts from the start of the prefix."""
+    return T.forward_decode(params, token, cache, pos, cfg)

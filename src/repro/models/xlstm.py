@@ -1,0 +1,358 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar
+memory, strictly recurrent with block-diagonal recurrence).
+
+mLSTM uses the stabilized exponential-gating formulation (Beck et al. 2024):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t q_t) / max(|n_t · q_t|, exp(-m_t)),
+computed chunkwise: within-chunk parallel (decay matrix D), cross-chunk state
+passed through a scan — O(S·chunk), sub-quadratic, so xlstm runs long_500k.
+
+sLSTM is inherently sequential (state mixing via recurrent weights); it scans
+over time. The 125M assigned config keeps this cheap.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import _normal, apply_norm, init_norm
+
+MLSTM_CHUNK = 128
+MLSTM_PF = 2          # mLSTM block projection factor
+SLSTM_PF = 4 / 3      # sLSTM block FFN projection factor
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel with stabilizer
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, *, state=None, chunk=MLSTM_CHUNK):
+    """q,k,v: (B,H,S,D); i_pre,f_pre: (B,H,S). Returns (h, state).
+
+    state = (C, n, m): (B,H,D,D), (B,H,D), (B,H) — the stabilized matrix
+    memory, normalizer and max-log-scale.
+    """
+    bsz, h, s, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    scale = d ** -0.5
+
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))           # (B,H,S)
+    logi = i_pre.astype(jnp.float32)
+
+    qc = q.reshape(bsz, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)  # (C,B,H,L,D)
+    kc = k.reshape(bsz, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(bsz, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    lf = logf.reshape(bsz, h, nc, chunk).transpose(2, 0, 1, 3)     # (C,B,H,L)
+    li = logi.reshape(bsz, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        C0 = jnp.zeros((bsz, h, d, d), jnp.float32)
+        n0 = jnp.zeros((bsz, h, d), jnp.float32)
+        m0 = jnp.full((bsz, h), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lft, lit = inp
+        b = jnp.cumsum(lft, axis=-1)                                # (B,H,L) inclusive
+        # decay matrix: D[t,s] = b_t - b_s + logi_s  (s <= t)
+        D = b[..., :, None] - b[..., None, :] + lit[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = D.max(-1)                                         # (B,H,L)
+        m_inter = b + m[..., None]                                  # (B,H,L)
+        m_t = jnp.maximum(m_intra, m_inter)
+        m_t = jnp.maximum(m_t, -1e30)                               # keep finite
+
+        W = jnp.exp(D - m_t[..., None])                             # (B,H,L,L)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qt, kt).astype(jnp.float32) * scale
+        gated = W * scores
+        num = jnp.einsum("bhts,bhsd->bhtd", gated, vt.astype(jnp.float32))
+        den = gated.sum(-1)                                         # (B,H,L)
+
+        inter_scale = jnp.exp(m_inter - m_t)                        # (B,H,L)
+        qf = qt.astype(jnp.float32) * scale
+        num = num + inter_scale[..., None] * jnp.einsum("bhtd,bhde->bhte", qf, C)
+        den = den + inter_scale * jnp.einsum("bhtd,bhd->bht", qf, n)
+
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # state to end of chunk
+        bL = b[..., -1]                                             # (B,H)
+        g = bL[..., None] - b + lit                                 # (B,H,L) decay to end
+        m_new = jnp.maximum(bL + m, g.max(-1))
+        m_new = jnp.maximum(m_new, -1e30)
+        carry_scale = jnp.exp(bL + m - m_new)[..., None, None]
+        gw = jnp.exp(g - m_new[..., None])                          # (B,H,L)
+        C_new = C * carry_scale + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", gw, vt.astype(jnp.float32), kt.astype(jnp.float32)
+        ).swapaxes(-1, -2)  # accumulate v k^T -> (D_v? ) keep (d, d): C[dv? ] see below
+        n_new = n * carry_scale[..., 0] + jnp.einsum(
+            "bhs,bhsd->bhd", gw, kt.astype(jnp.float32)
+        )
+        return (C_new, n_new, m_new), hout
+
+    # NOTE on C layout: C is (B,H,Dq,Dv) with h = q·C ⇒ C_new accumulates
+    # k ⊗ v. The einsum above builds (d_v, d_k); swapaxes fixes to (d_k, d_v).
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lf, li))
+    h_out = hs.transpose(1, 2, 0, 3, 4).reshape(bsz, h, s, d)
+    return h_out.astype(v.dtype), (C, n, m)
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """One-token recurrence. q,k,v: (B,H,D); i_pre,f_pre: (B,H)."""
+    C, n, m = state
+    d = q.shape[-1]
+    scale = d ** -0.5
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    m_new = jnp.maximum(m_new, -1e30)
+    fs = jnp.exp(logf + m - m_new)[..., None]
+    is_ = jnp.exp(logi - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = C * fs[..., None] + is_[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = n * fs + is_ * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(v.dtype), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — recurrent scan with block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_scan(x_gates, r_weights, *, state=None):
+    """x_gates: (B,S,H,4,D) input contributions for (i,f,z,o);
+    r_weights: (H,4,D,D) recurrent block-diag weights. Returns (h, state)."""
+    bsz, s, h, _, d = x_gates.shape
+    if state is None:
+        c0 = jnp.zeros((bsz, h, d), jnp.float32)
+        n0 = jnp.ones((bsz, h, d), jnp.float32)
+        hh0 = jnp.zeros((bsz, h, d), jnp.float32)
+        m0 = jnp.zeros((bsz, h, d), jnp.float32)
+    else:
+        c0, n0, hh0, m0 = state
+    rw = r_weights.astype(jnp.float32)
+
+    def step(carry, xt):
+        c, n, hh, m = carry
+        rec = jnp.einsum("bhd,hgde->bhge", hh, rw)                  # (B,H,4,D)
+        pre = xt.astype(jnp.float32) + rec
+        i_pre, f_pre, z_pre, o_pre = (pre[:, :, g] for g in range(4))
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_ = jnp.exp(i_pre - m_new)
+        f_ = jnp.exp(logf + m - m_new)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        c_new = f_ * c + i_ * z
+        n_new = jnp.maximum(f_ * n + i_, jnp.exp(-m_new))
+        h_new = o * c_new / n_new
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, hh, m), hs = jax.lax.scan(step, (c0, n0, hh0, m0), x_gates.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), (c, n, hh, m)  # (B,S,H,D)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.num_heads
+
+
+def init_mlstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = MLSTM_PF * d
+    hd = di // _heads(cfg)
+    ks = jax.random.split(key, 8)
+    s_in = 1.0 / math.sqrt(d)
+    s_i = 1.0 / math.sqrt(di)
+    params = {
+        "ln": init_norm("rms", d, cfg.pdtype)[0],
+        "up": _normal(ks[0], (d, 2 * di), cfg.pdtype, s_in),
+        "wq": _normal(ks[1], (di, di), cfg.pdtype, s_i),
+        "wk": _normal(ks[2], (di, di), cfg.pdtype, s_i),
+        "wv": _normal(ks[3], (di, di), cfg.pdtype, s_i),
+        "wi": _normal(ks[4], (di, _heads(cfg)), cfg.pdtype, s_i),
+        "wf": _normal(ks[5], (di, _heads(cfg)), cfg.pdtype, s_i),
+        "f_bias": jnp.full((_heads(cfg),), 3.0, cfg.pdtype),
+        "out_norm": jnp.ones((di,), cfg.pdtype),
+        "down": _normal(ks[6], (di, d), cfg.pdtype,
+                        1.0 / math.sqrt(di * 2 * max(cfg.num_layers, 1))),
+    }
+    axes = {
+        "ln": {"scale": ("embed",)},
+        "up": ("embed", "ffn"), "wq": ("ffn", "ffn"), "wk": ("ffn", "ffn"),
+        "wv": ("ffn", "ffn"), "wi": ("ffn", None), "wf": ("ffn", None),
+        "f_bias": (None,), "out_norm": ("ffn",), "down": ("ffn", "embed"),
+    }
+    del hd
+    return params, axes
+
+
+def mlstm_block_fwd(p, x, cfg: ModelConfig, *, state=None, decode=False):
+    cd = cfg.cdtype
+    bsz, s, d = x.shape
+    di = MLSTM_PF * d
+    h = _heads(cfg)
+    hd = di // h
+    xin = apply_norm(p["ln"], x)
+    up = xin.astype(cd) @ p["up"].astype(cd)
+    xm, z = up[..., :di], up[..., di:]
+    q = (xm @ p["wq"].astype(cd)).reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+    k = (xm @ p["wk"].astype(cd)).reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+    v = (xm @ p["wv"].astype(cd)).reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+    i_pre = (xm @ p["wi"].astype(cd)).transpose(0, 2, 1)            # (B,H,S)
+    f_pre = (xm @ p["wf"].astype(cd)).transpose(0, 2, 1) + p["f_bias"].astype(cd)[None, :, None]
+
+    if decode:
+        hout, new_state = mlstm_step(state, q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                     i_pre[:, :, 0], f_pre[:, :, 0])
+        hout = hout[:, :, None, :]
+    else:
+        hout, new_state = mlstm_chunked(q, k, v, i_pre, f_pre, state=state)
+
+    hout = hout.transpose(0, 2, 1, 3).reshape(bsz, s, di)
+    # per-block norm then input gate
+    hf = hout.astype(jnp.float32)
+    var = (hf ** 2).mean(-1, keepdims=True)
+    hout = (hf * jax.lax.rsqrt(var + 1e-6) * p["out_norm"].astype(jnp.float32)).astype(cd)
+    hout = hout * jax.nn.silu(z)
+    y = hout @ p["down"].astype(cd)
+    return x + y.astype(x.dtype), new_state
+
+
+def init_slstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = _heads(cfg)
+    hd = d // h
+    f = int(SLSTM_PF * d)
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    params = {
+        "ln": init_norm("rms", d, cfg.pdtype)[0],
+        "w_gates": _normal(ks[0], (d, h, 4, hd), cfg.pdtype, s_in),
+        "r_gates": _normal(ks[1], (h, 4, hd, hd), cfg.pdtype, 1.0 / math.sqrt(hd)),
+        "gate_bias": jnp.concatenate([
+            jnp.zeros((h, 1, hd)), jnp.full((h, 1, hd), 3.0), jnp.zeros((h, 2, hd))
+        ], axis=1).astype(cfg.pdtype),
+        "ln2": init_norm("rms", d, cfg.pdtype)[0],
+        "ffn_up": _normal(ks[2], (d, 2 * f), cfg.pdtype, s_in),
+        "ffn_down": _normal(ks[3], (f, d), cfg.pdtype,
+                            1.0 / math.sqrt(f * 2 * max(cfg.num_layers, 1))),
+    }
+    axes = {
+        "ln": {"scale": ("embed",)},
+        "w_gates": ("embed", None, None, None),
+        "r_gates": (None, None, None, None),
+        "gate_bias": (None, None, None),
+        "ln2": {"scale": ("embed",)},
+        "ffn_up": ("embed", "ffn"),
+        "ffn_down": ("ffn", "embed"),
+    }
+    return params, axes
+
+
+def slstm_block_fwd(p, x, cfg: ModelConfig, *, state=None, decode=False):
+    cd = cfg.cdtype
+    bsz, s, d = x.shape
+    h = _heads(cfg)
+    hd = d // h
+    xin = apply_norm(p["ln"], x)
+    gates = jnp.einsum("bsd,dhge->bshge", xin.astype(cd), p["w_gates"].astype(cd))
+    gates = gates + p["gate_bias"].astype(cd)[None, None]
+    hs, new_state = slstm_scan(gates, p["r_gates"], state=state)
+    hs = hs.reshape(bsz, s, d).astype(cd)
+    x = x + hs.astype(x.dtype)
+    # gated FFN
+    xin2 = apply_norm(p["ln2"], x)
+    up = xin2.astype(cd) @ p["ffn_up"].astype(cd)
+    f = up.shape[-1] // 2
+    y = jax.nn.silu(up[..., :f]) * up[..., f:]
+    y = y @ p["ffn_down"].astype(cd)
+    return x + y.astype(x.dtype), new_state
+
+
+def is_slstm_layer(cfg: ModelConfig, i: int) -> bool:
+    return cfg.slstm_every > 0 and (i % cfg.slstm_every) == (cfg.slstm_every - 1)
+
+
+# ---------------------------------------------------------------------------
+# full model (unrolled layers — 12-layer config keeps HLO small)
+# ---------------------------------------------------------------------------
+
+def init_xlstm(key, cfg: ModelConfig):
+    from repro.core import qr_embedding
+
+    ke, *kl = jax.random.split(key, cfg.num_layers + 1)
+    params = {"embed": qr_embedding.init(ke, cfg.emb_config)}
+    axes = {"embed": qr_embedding.param_axes(cfg.emb_config)}
+    blocks, baxes = [], []
+    for i in range(cfg.num_layers):
+        if is_slstm_layer(cfg, i):
+            p, a = init_slstm_block(kl[i], cfg)
+        else:
+            p, a = init_mlstm_block(kl[i], cfg)
+        blocks.append(p)
+        baxes.append(a)
+    params["blocks"] = blocks
+    axes["blocks"] = baxes
+    params["final_norm"], axes["final_norm"] = init_norm("rms", cfg.d_model, cfg.pdtype)
+    return params, axes
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int):
+    states = []
+    d = cfg.d_model
+    h = _heads(cfg)
+    for i in range(cfg.num_layers):
+        if is_slstm_layer(cfg, i):
+            hd = d // h
+            states.append((
+                jnp.zeros((batch, h, hd), jnp.float32),
+                jnp.ones((batch, h, hd), jnp.float32),
+                jnp.zeros((batch, h, hd), jnp.float32),
+                jnp.zeros((batch, h, hd), jnp.float32),
+            ))
+        else:
+            hd = MLSTM_PF * d // h
+            states.append((
+                jnp.zeros((batch, h, hd, hd), jnp.float32),
+                jnp.zeros((batch, h, hd), jnp.float32),
+                jnp.full((batch, h), -1e30, jnp.float32),
+            ))
+    return states
+
+
+def forward_xlstm(params, tokens, cfg: ModelConfig, *, states=None, decode=False):
+    """tokens: (B, S) -> (logits, states)."""
+    from repro.core import qr_embedding
+    from repro.models.transformer import lm_logits
+
+    x = qr_embedding.lookup(params["embed"], tokens, cfg.emb_config).astype(cfg.cdtype)
+    x = constrain(x, "batch", "seq", "embed")
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        st = None if states is None else states[i]
+        if is_slstm_layer(cfg, i):
+            x, ns = slstm_block_fwd(bp, x, cfg, state=st, decode=decode)
+        else:
+            x, ns = mlstm_block_fwd(bp, x, cfg, state=st, decode=decode)
+        new_states.append(ns)
+    x = apply_norm(params["final_norm"], x)
+    return lm_logits(params, x, cfg), new_states

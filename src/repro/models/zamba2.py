@@ -1,0 +1,182 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single weight-SHARED
+attention+MLP block applied every ``attn_every`` layers.
+
+Simplifications vs. the released checkpoints (noted in DESIGN.md): the shared
+block consumes the hidden state only (no concatenated original-embedding
+input, no per-application LoRA deltas); one shared block, full MHA (kv=32 per
+the assigned config line).
+
+The layer stack is statically segmented: 13 scanned 6-layer mamba segments,
+each followed by one shared-attention application (plus 3 trailing mamba
+layers) — no data-dependent branching in the HLO. Each attention site owns
+its own KV-cache slot (weights are shared, caches are not).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import qr_embedding
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.transformer import lm_logits
+
+
+def _remat_policy(cfg):
+    """None = recompute everything (min memory); 'dots' saves matmul outputs
+    (the standard MaxText-style policy: ~1/3 less recompute for ~1 activation
+    copy more memory)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return None
+
+
+def num_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def init_zamba2(key, cfg: ModelConfig):
+    ke, kl, ka, km, kn = jax.random.split(key, 5)
+    params, axes = {}, {}
+    params["embed"] = qr_embedding.init(ke, cfg.emb_config)
+    axes["embed"] = qr_embedding.param_axes(cfg.emb_config)
+
+    keys = jax.random.split(kl, cfg.num_layers)
+    params["mamba"] = jax.vmap(lambda k: M.init_mamba2(k, cfg)[0])(keys)
+    _, ma = M.init_mamba2(keys[0], cfg)
+    axes["mamba"] = jax.tree.map(
+        lambda a: ("layers",) + a, ma,
+        is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a),
+    )
+
+    # the shared attention + MLP block
+    params["shared_attn"], axes["shared_attn"] = L.init_attention(ka, cfg)
+    params["shared_mlp"], axes["shared_mlp"] = L.init_mlp(km, cfg)
+    params["shared_ln1"], axes["shared_ln1"] = L.init_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    params["shared_ln2"], axes["shared_ln2"] = L.init_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    params["final_norm"], axes["final_norm"] = L.init_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    return params, axes
+
+
+def _shared_block(params, x, cfg: ModelConfig, *, cache=None, pos=None):
+    h = L.apply_norm(params["shared_ln1"], x)
+    attn_out, new_cache = L.attention(params["shared_attn"], h, cfg, cache=cache, pos=pos)
+    x = x + attn_out
+    h = L.apply_norm(params["shared_ln2"], x)
+    x = x + L.mlp(params["shared_mlp"], h, cfg)
+    return x, new_cache
+
+
+def init_zamba2_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    sites = num_attn_sites(cfg)
+    h, pdim, n = M.num_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = M.d_inner(cfg) + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, h, pdim, n), dtype),
+        "conv": jnp.zeros((cfg.num_layers, batch, M.CONV_WIDTH - 1, conv_dim), dtype),
+        "k": jnp.zeros((sites, batch, max_len, cfg.kv_heads, cfg.head_dim_), dtype),
+        "v": jnp.zeros((sites, batch, max_len, cfg.kv_heads, cfg.head_dim_), dtype),
+    }
+
+
+def zamba2_cache_axes() -> dict:
+    return {
+        "ssm": ("layers", "batch", "heads", None, "state"),
+        "conv": ("layers", "batch", None, "ffn"),
+        "k": ("layers", "batch", "kvseq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kvseq", "kv_heads", "head_dim"),
+    }
+
+
+def _segment_bounds(cfg: ModelConfig) -> list[tuple[int, int, bool]]:
+    """(start, stop, attn_after) per segment: `every`-layer mamba runs with a
+    shared-attention application after each complete segment, plus a trailing
+    remainder segment.  Static segmentation (vs. a lax.cond inside the layer
+    scan) keeps the HLO free of data-dependent branches — XLA schedules the
+    attention sites concretely and the roofline analyzer needs no branch
+    heuristics."""
+    nl, every = cfg.num_layers, cfg.attn_every
+    sites = num_attn_sites(cfg)
+    segs = [(g * every, (g + 1) * every, True) for g in range(sites)]
+    if sites * every < nl:
+        segs.append((sites * every, nl, False))
+    return segs
+
+
+def _slice_layers(tree, start: int, stop: int):
+    return jax.tree.map(lambda a: a[start:stop], tree)
+
+
+def forward_zamba2(params, tokens, cfg: ModelConfig, *, cache=None, pos=None,
+                   decode=False):
+    """tokens: (B, S) -> (logits, cache). Train: cache=None."""
+    x = qr_embedding.lookup(params["embed"], tokens, cfg.emb_config).astype(cfg.cdtype)
+    x = constrain(x, "batch", "seq", "embed")
+    segs = _segment_bounds(cfg)
+
+    if cache is None:
+
+        def body(carry, lp):
+            h, _ = M.mamba2_fwd(lp, carry, cfg)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+        for start, stop, attn in segs:
+            x, _ = jax.lax.scan(body, x, _slice_layers(params["mamba"], start, stop))
+            if attn:
+                x, _ = _shared_block(params, x, cfg)
+        x = L.apply_norm(params["final_norm"], x)
+        return lm_logits(params, x, cfg), None
+
+    # stateful path: prefill (decode=False, S tokens) or decode (S==1)
+    max_len = cache["k"].shape[2]
+
+    def body(carry, xs):
+        h = carry
+        lp, ssm_l, conv_l = xs
+        h, (ssm2, conv2) = M.mamba2_fwd(
+            lp, h, cfg, state=ssm_l, conv_state=conv_l, decode=decode
+        )
+        return h, (ssm2, conv2)
+
+    kstack, vstack = cache["k"], cache["v"]
+    ssm_out, conv_out = [], []
+    for g, (start, stop, attn) in enumerate(segs):
+        x, (ssm2, conv2) = jax.lax.scan(
+            body,
+            x,
+            (
+                _slice_layers(params["mamba"], start, stop),
+                cache["ssm"][start:stop],
+                cache["conv"][start:stop],
+            ),
+        )
+        ssm_out.append(ssm2)
+        conv_out.append(conv2)
+        if not attn:
+            continue
+        if decode:
+            y, (kc2, vc2) = _shared_block(
+                params, x, cfg, cache=(kstack[g], vstack[g]), pos=pos
+            )
+        else:  # prefill: full-seq attention, then materialize the cache slot
+            y, (k, v) = _shared_block(params, x, cfg)
+            pad = max_len - k.shape[1]
+            kc2 = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kstack.dtype)
+            vc2 = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(vstack.dtype)
+        kstack = kstack.at[g].set(kc2)
+        vstack = vstack.at[g].set(vc2)
+        x = y
+    x = L.apply_norm(params["final_norm"], x)
+    new_cache = {
+        "ssm": jnp.concatenate(ssm_out, axis=0),
+        "conv": jnp.concatenate(conv_out, axis=0),
+        "k": kstack,
+        "v": vstack,
+    }
+    return lm_logits(params, x, cfg), new_cache

@@ -1,0 +1,2 @@
+from repro.train import optimizer, serve_step, train_step  # noqa: F401
+from repro.train.optimizer import OptConfig  # noqa: F401

@@ -1,0 +1,106 @@
+"""AdamW with sharded fp32 state + schedules + global-norm clipping.
+
+State is a pytree parallel to params (mu, nu) so it inherits the params'
+NamedShardings leaf-for-leaf — FSDP-sharded params give FSDP-sharded optimizer
+state for free (ZeRO-style).  All state math is fp32 regardless of param
+dtype; bf16 params are updated through an fp32 round-trip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"          # cosine | linear | constant
+
+
+def init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_axes(param_axes: dict) -> dict:
+    """Logical axes for the optimizer state tree (mirrors params)."""
+    return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+
+def learning_rate(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        if cfg.schedule == "linear":
+            decay = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+        else:  # cosine
+            decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * 0.5 * (
+                1.0 + jnp.cos(jnp.pi * t)
+            )
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, clip: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(params, grads, state, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state["step"] + 1
+    lr = learning_rate(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        upd = (m2 / c1) / (jnp.sqrt(v2 / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(leaf, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

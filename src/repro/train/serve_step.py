@@ -1,0 +1,159 @@
+"""Serving steps: prefill + one-token decode, unified across model families.
+
+Every family exposes the same surface so the launcher/dry-run treats them
+uniformly:
+
+    make_cache(cfg, batch, max_len)      -> cache pytree (+ axes via cache_axes)
+    prefill(params, batch, cfg, max_len) -> (last logits, cache)
+    decode(params, cache, token, pos, cfg) -> (logits, cache)
+
+``decode_*``/``long_*`` shape cells lower exactly one ``decode`` call with a
+cache of the cell's full seq_len — one new token against a seq_len-deep cache,
+per the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeFamily:
+    make_cache: Callable          # (cfg, batch, max_len) -> cache
+    cache_axes: Callable          # () -> logical-axes pytree
+    prefill: Callable             # (params, batch, cfg, max_len) -> (logits, cache)
+    decode: Callable              # (params, cache, token, pos, cfg) -> (logits, cache)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only transformers (qwen2, granite, chatglm3, minitron, moe archs)
+# ---------------------------------------------------------------------------
+
+def _tf_family() -> ServeFamily:
+    from repro.models import transformer as T
+
+    return ServeFamily(
+        make_cache=lambda cfg, b, m: T.init_cache(cfg, b, m),
+        cache_axes=T.cache_axes,
+        prefill=lambda p, batch, cfg, m: T.forward_prefill(p, batch["tokens"], cfg, m),
+        decode=lambda p, c, tok, pos, cfg: T.forward_decode(p, tok, c, pos, cfg),
+    )
+
+
+def _zamba_family() -> ServeFamily:
+    from repro.models import zamba2 as Z
+
+    return ServeFamily(
+        make_cache=lambda cfg, b, m: Z.init_zamba2_cache(cfg, b, m),
+        cache_axes=Z.zamba2_cache_axes,
+        prefill=lambda p, batch, cfg, m: _zamba_prefill(p, batch, cfg, m),
+        decode=lambda p, c, tok, pos, cfg: Z.forward_zamba2(
+            p, tok, cfg, cache=c, pos=pos, decode=True
+        ),
+    )
+
+
+def _zamba_prefill(p, batch, cfg, max_len):
+    from repro.models import zamba2 as Z
+
+    cache = Z.init_zamba2_cache(cfg, batch["tokens"].shape[0], max_len)
+    logits, cache = Z.forward_zamba2(
+        p, batch["tokens"], cfg, cache=cache, pos=jnp.int32(0), decode=False
+    )
+    return logits[:, -1:, :], cache
+
+
+def _xlstm_family() -> ServeFamily:
+    from repro.models import xlstm as X
+
+    def prefill(p, batch, cfg, m):
+        states = X.init_xlstm_state(cfg, batch["tokens"].shape[0])
+        logits, states = X.forward_xlstm(p, batch["tokens"], cfg, states=states)
+        return logits[:, -1:, :], states
+
+    return ServeFamily(
+        make_cache=lambda cfg, b, m: X.init_xlstm_state(cfg, b),
+        cache_axes=lambda: None,     # recurrent states: replicated-over-model
+        prefill=prefill,
+        decode=lambda p, c, tok, pos, cfg: X.forward_xlstm(
+            p, tok, cfg, states=c, decode=True
+        ),
+    )
+
+
+def _whisper_family() -> ServeFamily:
+    from repro.models import whisper as W
+
+    return ServeFamily(
+        make_cache=lambda cfg, b, m: W.init_cache(cfg, b, m),
+        cache_axes=W.cache_axes,
+        prefill=lambda p, batch, cfg, m: W.forward_prefill(
+            p, batch["frames"], batch["tokens"], cfg, m
+        ),
+        decode=lambda p, c, tok, pos, cfg: W.forward_decode(p, tok, c, pos, cfg),
+    )
+
+
+def _pixtral_family() -> ServeFamily:
+    # cache length covers the patch prefix + max_len text positions
+    from repro.models import pixtral as P
+
+    return ServeFamily(
+        make_cache=lambda cfg, b, m: P.init_cache(cfg, b, m + cfg.num_patches),
+        cache_axes=P.cache_axes,
+        prefill=lambda p, batch, cfg, m: P.forward_prefill(
+            p, batch["patches"], batch["tokens"], cfg, m + cfg.num_patches
+        ),
+        decode=lambda p, c, tok, pos, cfg: P.forward_decode(p, tok, c, pos, cfg),
+    )
+
+
+_FAMILIES: dict[str, Callable[[], ServeFamily]] = {
+    "transformer": _tf_family,
+    "zamba2": _zamba_family,
+    "xlstm": _xlstm_family,
+    "whisper": _whisper_family,
+    "pixtral": _pixtral_family,
+}
+
+
+def serve_family(kind: str) -> ServeFamily:
+    return _FAMILIES[kind]()
+
+
+# ---------------------------------------------------------------------------
+# batched serving loop (runnable example path; jit per step)
+# ---------------------------------------------------------------------------
+
+def greedy_generate(
+    fam: ServeFamily,
+    params: Any,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    max_new: int,
+    max_len: int,
+):
+    """Prefill then greedy-decode ``max_new`` tokens. Returns (B, max_new)."""
+    logits, cache = jax.jit(
+        lambda p, b: fam.prefill(p, b, cfg, max_len)
+    )(params, batch)
+    step = jax.jit(
+        lambda p, c, t, pos: fam.decode(p, c, t, pos, cfg)
+    )
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    pos0 = batch["tokens"].shape[1]
+    if "patches" in batch:
+        pos0 += batch["patches"].shape[1]
+    outs = []
+    for i in range(max_new):
+        outs.append(tok[:, 0])
+        logits, cache = step(params, cache, tok, jnp.int32(pos0 + i))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.stack(outs, axis=1)

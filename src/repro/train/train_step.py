@@ -1,0 +1,121 @@
+"""Generic training step: loss -> grads -> AdamW, with microbatch grad-accum.
+
+Any model plugs in through a ``loss_fn(params, batch) -> (loss, metrics)``;
+the step handles microbatching (a ``lax.scan`` over batch slices accumulating
+fp32 grads — this is also the activation-memory knob for the big train cells),
+gradient clipping and the optimizer update.  Everything is jit-compatible and
+lowers under pjit with the shardings supplied by the launcher.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Causal LM loss: logits (B, S, V) vs shifted tokens (B, S); fp32 math."""
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_lm_loss(forward_fn: Callable, cfg) -> Callable:
+    """forward_fn(params, tokens, cfg) -> logits. batch = {"tokens": (B, S)}."""
+
+    def loss_fn(params, batch):
+        logits = forward_fn(params, batch["tokens"], cfg)
+        loss = next_token_loss(logits, batch["tokens"])
+        return loss, {"loss": loss}
+
+    return loss_fn
+
+
+def make_prefixed_lm_loss(forward_fn: Callable, cfg, prefix_key: str) -> Callable:
+    """For whisper (prefix=frames) / pixtral (prefix=patches)."""
+
+    def loss_fn(params, batch):
+        logits = forward_fn(params, batch[prefix_key], batch["tokens"], cfg)
+        loss = next_token_loss(logits, batch["tokens"])
+        return loss, {"loss": loss}
+
+    return loss_fn
+
+
+def make_dlrm_loss(cfg) -> Callable:
+    from repro.models import dlrm
+
+    def loss_fn(params, batch):
+        logits = dlrm.forward_dlrm(params, batch["dense"], batch["idx"], cfg)
+        loss = dlrm.bce_loss(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+def _split_microbatches(batch: dict, m: int) -> dict:
+    return jax.tree.map(lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+
+            def body(acc, b):
+                loss_i, _, g_i = grads_of(params, b)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches, acc[0], g_i
+                ), acc[1] + loss_i / microbatches
+                return acc, None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(body, (zero, jnp.float32(0)), mb)
+            metrics = {"loss": loss}
+
+        params, opt_state, opt_metrics = opt_mod.update(
+            params, grads, opt_state, opt_cfg
+        )
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

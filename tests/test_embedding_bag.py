@@ -1,0 +1,69 @@
+"""Embedding-bag GnR semantics + the traffic model the benchmarks rely on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import embedding_bag as EB, qr_embedding as QE
+from repro.core.embedding_bag import BagConfig
+from repro.core.qr_embedding import EmbeddingConfig
+
+
+def _bag(kind="qr", **kw):
+    emb = EmbeddingConfig(
+        vocab=512, dim=16, kind=kind, collision=8,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32, **kw,
+    )
+    return BagConfig(emb=emb, pooling=4)
+
+
+def test_qr_add_pooling_pushes_through_reconstruction():
+    """Σ(Q[q]+R[r]) == pooled lookup — the associativity the PIM scheme uses."""
+    bag = _bag()
+    params = QE.init(jax.random.PRNGKey(0), bag.emb)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (6, 4), 0, 512)
+    fast = EB.bag_lookup(params, idx, bag)
+    naive = QE.lookup(params, idx, bag.emb).sum(axis=-2)
+    np.testing.assert_allclose(fast, naive, rtol=1e-5)
+
+
+def test_weighted_bag():
+    bag = _bag()
+    params = QE.init(jax.random.PRNGKey(0), bag.emb)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (3, 4), 0, 512)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (3, 4))
+    out = EB.bag_lookup(params, idx, bag, weights=w)
+    expect = (QE.lookup(params, idx, bag.emb) * w[..., None]).sum(axis=-2)
+    np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+
+def test_mean_combiner():
+    bag = BagConfig(emb=_bag().emb, pooling=4, combiner="mean")
+    params = QE.init(jax.random.PRNGKey(0), bag.emb)
+    idx = jnp.zeros((2, 4), jnp.int32)
+    out = EB.bag_lookup(params, idx, bag)
+    single = QE.lookup(params, jnp.zeros((2,), jnp.int32), bag.emb)
+    np.testing.assert_allclose(out, single, rtol=1e-5)
+
+
+def test_multi_bag_stacks_tables():
+    bags = [_bag(), _bag(kind="dense")]
+    tables = EB.init_tables(jax.random.PRNGKey(0), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (5, 2, 4), 0, 512)
+    out = EB.multi_bag_lookup(tables, idx, bags)
+    assert out.shape == (5, 2, 16)
+    for t in range(2):
+        np.testing.assert_allclose(
+            out[:, t], EB.bag_lookup(tables[t], idx[:, t], bags[t]), rtol=1e-5
+        )
+
+
+def test_traffic_model_paper_premises():
+    """The analytic traffic model must encode the paper's two facts:
+    (1) weight-sharing doubles DRAM access; (2) the LUT removes the doubling."""
+    qr = EB.traffic_model(_bag("qr"))
+    assert qr["naive"] == 2 * qr["dense"]          # the double-access problem
+    assert qr["fused"] == qr["dense"]              # the LUT restores parity
+    dense = EB.traffic_model(_bag("dense"))
+    assert dense["naive"] == dense["dense"] == dense["fused"]

@@ -1,0 +1,109 @@
+"""The loop-aware HLO analyzer — the roofline's metrology layer."""
+
+import numpy as np
+
+from repro.launch import hlo_analysis as HA
+
+# A hand-written HLO module: entry calls a while (trip 3) whose body has one
+# dot (m=4,k=8,n=16 -> 1024 flops) and one all-reduce over groups of 4.
+SYNTH = """
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[4,8], f32[8,16], f32[4,16])) -> (s32[], f32[4,8], f32[8,16], f32[4,16]) {
+  %p = (s32[], f32[4,8], f32[8,16], f32[4,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lhs = f32[4,8]{1,0} get-tuple-element(%p), index=1
+  %rhs = f32[8,16]{1,0} get-tuple-element(%p), index=2
+  %dot.1 = f32[4,16]{1,0} dot(%lhs, %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,16]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,8], f32[8,16], f32[4,16]) tuple(%ip, %lhs, %rhs, %ar)
+}
+
+%cond (p: (s32[], f32[4,8], f32[8,16], f32[4,16])) -> pred[] {
+  %p = (s32[], f32[4,8], f32[8,16], f32[4,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4,8], y: f32[8,16]) -> f32[4,16] {
+  %x = f32[4,8]{1,0} parameter(0)
+  %y = f32[8,16]{1,0} parameter(1)
+  %z = s32[] constant(0)
+  %acc = f32[4,16]{1,0} broadcast(%z), dimensions={}
+  %t0 = (s32[], f32[4,8], f32[8,16], f32[4,16]) tuple(%z, %x, %y, %acc)
+  %w = (s32[], f32[4,8], f32[8,16], f32[4,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %out = f32[4,16]{1,0} get-tuple-element(%w), index=3
+}
+"""
+
+
+def test_parse_computations():
+    comps = HA.parse_hlo(SYNTH)
+    assert set(comps) == {"add", "body", "cond", "main"}
+    assert comps["body"].instrs["dot.1"].opcode == "dot"
+    assert comps["main"].root == "out"
+
+
+def test_loop_multiplied_flops_and_collectives():
+    res = HA.analyze(SYNTH, entry="main")
+    # dot: 2*4*16*8 = 1024 flops, x3 trips
+    assert res["flops"] == 3 * 1024
+    # all-reduce operand f32[4,16] = 256 B, x3
+    assert res["coll_bytes"]["all-reduce"] == 3 * 256
+    assert res["coll_counts"]["all-reduce"] == 3
+    # ring wire bytes: 2*B*(g-1)/g with g=4
+    np.testing.assert_allclose(
+        res["coll_wire"]["all-reduce"], 3 * 2 * 256 * 3 / 4
+    )
+    assert res["unknown_loops"] == 0
+
+
+def test_bytes_model():
+    res = HA.analyze(SYNTH, entry="main")
+    # per trip: dot (32+128+64 fl.. bytes: lhs 128 + rhs 512 + out 256) +
+    # all-reduce (256+256) + add s32 (12) -> x3; broadcast/tuple/GTE are free
+    per_trip = (128 + 512 + 256) + (256 + 256) + 12
+    assert res["bytes"] == 3 * per_trip
+
+
+def test_dtype_table_and_type_parse():
+    types, end = HA._parse_result_types("(f32[2,2]{1,0}, bf16[4]{0}) tuple(...)")
+    assert HA._types_bytes(types) == 16 + 8
+    types, _ = HA._parse_result_types("pred[] compare(...)")
+    assert HA._types_bytes(types) == 1
+
+
+GATHER_FUSION = """
+HloModule g
+
+%fused_computation (param_0: f32[1000,64], param_1: s32[8,1]) -> f32[8,64] {
+  %param_0 = f32[1000,64]{1,0} parameter(0)
+  %param_1 = s32[8,1]{1,0} parameter(1)
+  ROOT %g = f32[8,64]{1,0} gather(%param_0, %param_1), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,64}
+}
+
+ENTRY %main (t: f32[1000,64], i: s32[8,1]) -> f32[8,64] {
+  %t = f32[1000,64]{1,0} parameter(0)
+  %i = s32[8,1]{1,0} parameter(1)
+  ROOT %f = f32[8,64]{1,0} fusion(%t, %i), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_gather_fusion_touched_rows_discount():
+    """A 256 KB table consumed only by a gather of 8 rows must NOT count as
+    256 KB of traffic (the embedding-lookup case the paper lives on)."""
+    res = HA.analyze(GATHER_FUSION, entry="main")
+    touched = 2 * 8 * 64 * 4          # 2 x result bytes
+    idx = 8 * 4
+    assert res["bytes"] <= 8 * 64 * 4 + touched + idx
+    assert res["bytes"] < 1000 * 64 * 4   # far below the full table

@@ -1,0 +1,150 @@
+"""Decode-vs-train-forward consistency at fp32: prefill + one decode step must
+reproduce the train-mode forward logits at that position, per family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+
+TOL = 5e-5
+
+
+def _fp32(binding):
+    return binding.smoke.replace(compute_dtype="float32", param_dtype="float32")
+
+
+def test_transformer_decode_consistency():
+    from repro.models import transformer as T
+
+    binding = registry.get("qwen2-1.5b")
+    cfg = _fp32(binding)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    full = T.forward_train(params, toks, cfg)
+    lg, cache = T.forward_prefill(params, toks[:, :11], cfg, max_len=16)
+    np.testing.assert_allclose(lg[:, 0], full[:, 10], rtol=TOL, atol=TOL)
+    lg2, _ = T.forward_decode(params, toks[:, 11:12], cache, jnp.int32(11), cfg)
+    np.testing.assert_allclose(lg2[:, 0], full[:, 11], rtol=TOL, atol=TOL)
+
+
+def test_zamba2_decode_consistency():
+    from repro.models import zamba2 as Z
+
+    binding = registry.get("zamba2-7b")
+    cfg = _fp32(binding)
+    params, _ = Z.init_zamba2(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    full, _ = Z.forward_zamba2(params, toks, cfg)
+    cache = Z.init_zamba2_cache(cfg, 2, 12, dtype=jnp.float32)
+    lg, cache = Z.forward_zamba2(
+        params, toks[:, :7], cfg, cache=cache, pos=jnp.int32(0), decode=False
+    )
+    lg2, _ = Z.forward_zamba2(
+        params, toks[:, 7:8], cfg, cache=cache, pos=jnp.int32(7), decode=True
+    )
+    np.testing.assert_allclose(lg2[:, 0], full[:, 7], rtol=1e-4, atol=1e-4)
+
+
+def test_xlstm_decode_consistency():
+    from repro.models import xlstm as X
+
+    binding = registry.get("xlstm-125m")
+    cfg = _fp32(binding)
+    params, _ = X.init_xlstm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab)
+    full, _ = X.forward_xlstm(params, toks, cfg)
+    st = X.init_xlstm_state(cfg, 2)
+    outs = []
+    for t in range(9):
+        lg, st = X.forward_xlstm(params, toks[:, t: t + 1], cfg, states=st, decode=True)
+        outs.append(lg[:, 0])
+    seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(seq, full, rtol=2e-4, atol=2e-4)
+
+
+def test_whisper_decode_consistency():
+    from repro.models import whisper as W
+
+    binding = registry.get("whisper-large-v3")
+    cfg = _fp32(binding)
+    params, _ = W.init_whisper(jax.random.PRNGKey(0), cfg)
+    frames = jax.random.normal(jax.random.PRNGKey(2), (2, W.N_AUDIO, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    full = W.forward_train(params, frames, toks, cfg)
+    lg, cache = W.forward_prefill(params, frames, toks[:, :5], cfg, max_len=8)
+    np.testing.assert_allclose(lg[:, 0], full[:, 4], rtol=TOL, atol=TOL)
+    lg2, _ = W.forward_decode(params, toks[:, 5:6], cache, jnp.int32(5), cfg)
+    np.testing.assert_allclose(lg2[:, 0], full[:, 5], rtol=1e-4, atol=1e-4)
+
+
+def test_pixtral_decode_consistency():
+    from repro.models import pixtral as P
+
+    binding = registry.get("pixtral-12b")
+    cfg = _fp32(binding)
+    params, _ = P.init_pixtral(jax.random.PRNGKey(0), cfg)
+    patches = jax.random.normal(jax.random.PRNGKey(2), (2, cfg.num_patches, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    full = P.forward_train(params, patches, toks, cfg)
+    max_len = cfg.num_patches + 8
+    lg, cache = P.forward_prefill(params, patches, toks[:, :5], cfg, max_len)
+    np.testing.assert_allclose(lg[:, 0], full[:, 4], rtol=TOL, atol=TOL)
+    pos = cfg.num_patches + 5
+    lg2, _ = P.forward_decode(params, toks[:, 5:6], cache, jnp.int32(pos), cfg)
+    np.testing.assert_allclose(lg2[:, 0], full[:, 5], rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_chunked_vs_step():
+    from repro.configs.base import ModelConfig
+    from repro.models import mamba2 as M
+
+    cfg = ModelConfig(
+        name="m", family="ssm", num_layers=1, d_model=32, num_heads=2, kv_heads=2,
+        d_ff=0, vocab=64, ssm_state=8, ssm_head_dim=8,
+        compute_dtype="float32", param_dtype="float32",
+    )
+    params, _ = M.init_mamba2(jax.random.PRNGKey(4), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 32))
+    y_par, _ = M.mamba2_fwd(params, u, cfg)
+    st, conv = M.init_ssm_state(cfg, 1, dtype=jnp.float32)
+    ys = []
+    for t in range(8):
+        yt, (st, conv) = M.mamba2_fwd(
+            params, u[:, t: t + 1], cfg, state=st, conv_state=conv, decode=True
+        )
+        ys.append(yt)
+    np.testing.assert_allclose(
+        jnp.concatenate(ys, axis=1), y_par, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_flash_attention_vs_naive():
+    from repro.models import layers as L
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 4, 64, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 64, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 64, 16))
+    out = L.flash_attention(q, k, v, causal=True, q_block=16, kv_block=16)
+    # naive reference with GQA expansion
+    kk = jnp.repeat(k, 2, axis=1)
+    vv = jnp.repeat(v, 2, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q * 16 ** -0.5, kk)
+    mask = jnp.tril(jnp.ones((64, 64), bool))
+    s = jnp.where(mask, s, -1e30)
+    expect = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), vv)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_non_divisible_blocks():
+    from repro.models import layers as L
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 2, 48, 8))   # 48 not divisible by 32
+    k = jax.random.normal(key, (1, 2, 96, 8))
+    v = jax.random.normal(key, (1, 2, 96, 8))
+    out = L.flash_attention(q, k, v, causal=False, q_block=32, kv_block=32)
+    assert out.shape == (1, 2, 48, 8)
+    assert not bool(jnp.isnan(out).any())

@@ -1,0 +1,62 @@
+"""Per-arch REDUCED-config smoke tests (assignment deliverable f): one
+forward/train step on CPU asserting output shapes + no NaNs, plus one
+prefill+decode step per arch with a decode path."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.train import optimizer as opt_mod
+from repro.train.serve_step import serve_family
+from repro.train.train_step import make_train_step
+
+ARCHS = sorted(registry.ARCHS)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    binding = registry.get(arch)
+    cfg = binding.smoke
+    params, axes = registry.init_fn(binding)(jax.random.PRNGKey(0), cfg)
+    batch = registry.make_batch_fn(binding, cfg)(4, 32, seed=0, step=0)
+    loss_fn = registry.train_loss_fn(binding, cfg)
+    step = jax.jit(
+        make_train_step(loss_fn, opt_mod.OptConfig(warmup_steps=1), microbatches=2)
+    )
+    p2, o2, m = step(params, opt_mod.init(params), batch)
+    assert m["loss"].shape == ()
+    assert not bool(jnp.isnan(m["loss"]))
+    for leaf in jax.tree.leaves(p2):
+        assert not bool(jnp.isnan(leaf).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    binding = registry.get(arch)
+    cfg = binding.smoke
+    params, _ = registry.init_fn(binding)(jax.random.PRNGKey(0), cfg)
+    batch = registry.make_batch_fn(binding, cfg)(2, 16, seed=0, step=0)
+    fam = serve_family(binding.kind)
+    logits, cache = jax.jit(lambda p, b: fam.prefill(p, b, cfg, 32))(params, batch)
+    assert logits.shape == (2, 1, cfg.vocab)
+    pos0 = 16 + (cfg.num_patches if binding.kind == "pixtral" else 0)
+    tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, c, t, pos: fam.decode(p, c, t, pos, cfg)
+    )(params, cache, tok, jnp.int32(pos0))
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.isnan(logits2).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_qr_embedding_variant(arch):
+    """Every arch accepts the paper's technique (embedding.kind = qr)."""
+    binding = registry.get(arch)
+    cfg = binding.smoke.replace(embedding_kind="qr", qr_collision=8)
+    params, _ = registry.init_fn(binding)(jax.random.PRNGKey(0), cfg)
+    assert "q" in params["embed"] and "r" in params["embed"]
+    batch = registry.make_batch_fn(binding, cfg)(2, 16, seed=0, step=0)
+    loss_fn = registry.train_loss_fn(binding, cfg)
+    loss, _ = jax.jit(loss_fn)(params, batch)
+    assert not bool(jnp.isnan(loss))

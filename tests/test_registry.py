@@ -1,0 +1,87 @@
+"""Registry: the 10-arch x 4-shape grid, skip rules, abstract specs."""
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import LM_SHAPES
+
+
+def test_ten_archs_present():
+    assert len(registry.ARCHS) == 10
+
+
+def test_grid_is_40_cells():
+    cells = list(registry.cells(include_skipped=True))
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2] == "run"]
+    # long_500k runs only for the 2 sub-quadratic archs -> 10*3 + 2 = 32
+    assert len(runnable) == 32
+
+
+def test_skip_reasons():
+    b = registry.get("qwen2-1.5b")
+    long = [s for s in LM_SHAPES if s.name == "long_500k"][0]
+    assert "sub-quadratic" in registry.shape_status(b, long)
+    z = registry.get("zamba2-7b")
+    assert registry.shape_status(z, long) == "run"
+    x = registry.get("xlstm-125m")
+    assert registry.shape_status(x, long) == "run"
+
+
+def test_assigned_config_numbers():
+    """The exact assigned architecture hyperparameters (spot checks)."""
+    c = registry.get("qwen2-1.5b").config
+    assert (c.num_layers, c.d_model, c.num_heads, c.kv_heads, c.d_ff, c.vocab) == (
+        28, 1536, 12, 2, 8960, 151936)
+    c = registry.get("granite-34b").config
+    assert (c.num_layers, c.d_model, c.num_heads, c.kv_heads, c.d_ff, c.vocab) == (
+        88, 6144, 48, 1, 24576, 49152)
+    c = registry.get("qwen3-moe-235b-a22b").config
+    assert (c.num_layers, c.num_experts, c.top_k, c.vocab) == (94, 128, 8, 151936)
+    c = registry.get("zamba2-7b").config
+    assert (c.num_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    c = registry.get("minitron-4b").config
+    assert c.vocab == 256000
+    c = registry.get("granite-moe-3b-a800m").config
+    assert (c.num_experts, c.top_k, c.d_ff) == (40, 8, 512)
+    c = registry.get("xlstm-125m").config
+    assert (c.num_layers, c.d_model, c.d_ff) == (12, 768, 0)
+    c = registry.get("whisper-large-v3").config
+    assert (c.enc_layers, c.dec_layers, c.d_model, c.vocab) == (32, 32, 1280, 51866)
+    c = registry.get("pixtral-12b").config
+    assert (c.num_layers, c.d_model, c.kv_heads, c.vocab) == (40, 5120, 8, 131072)
+    c = registry.get("chatglm3-6b").config
+    assert (c.d_ff, c.vocab, c.partial_rotary) == (13696, 65024, 0.5)
+
+
+@pytest.mark.parametrize("arch", sorted(registry.ARCHS))
+def test_batch_specs_shapes(arch):
+    b = registry.get(arch)
+    cfg = b.config
+    specs = registry.batch_specs(b, cfg, 4, 128)
+    assert specs["tokens"].shape == (4, 128)
+    if b.kind == "whisper":
+        assert specs["frames"].shape[2] == cfg.d_model
+    if b.kind == "pixtral":
+        assert specs["patches"].shape == (4, cfg.num_patches, cfg.d_model)
+
+
+@pytest.mark.parametrize("arch", sorted(registry.ARCHS))
+def test_abstract_params_match_real_init_structure(arch):
+    """eval_shape params and reduced-config axes trees must align leaf-for-
+    leaf — this is what the dry-run's shardings are built from."""
+    b = registry.get(arch)
+    smoke = b.smoke
+    params, axes = registry.init_fn(b)(jax.random.PRNGKey(0), smoke)
+    import jax.tree_util as jtu
+
+    pleaves = jtu.tree_flatten_with_path(params)[0]
+    # every param leaf must have a resolvable axes annotation path
+    from repro.distributed import sharding as SH
+    from repro.launch.mesh import make_mesh
+
+    # 1-device mesh is enough to exercise resolution
+    mesh = make_mesh((1,), ("model",))
+    sh = SH.shardings_for_tree(mesh, params, axes, SH.PARAM_RULES)
+    assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(params))
