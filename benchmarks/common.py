@@ -1,7 +1,8 @@
-"""Shared benchmark helpers: timing, CSV emission."""
+"""Shared benchmark helpers: timing, CSV + JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -12,6 +13,17 @@ ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as machine-readable JSON (perf-trajectory
+    tracking across PRs: stable keys, one record per ``emit``)."""
+    records = [
+        {"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS
+    ]
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {len(records)} records to {path}")
 
 
 def time_jit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

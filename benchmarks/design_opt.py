@@ -104,6 +104,33 @@ def analytic_ladder(dim_bytes: int = 512, pooling: int = 32, chips: int = 16):
     return base, two, batch, lut
 
 
+def tt_analytic_ladder(
+    *, dim: int = 128, rank: int = 16, pooling: int = 32, bytes_per_elem: int = 4,
+):
+    """Per-bag service time (ns) ladder for the TT path (paper's 2.15x case).
+
+    baseline     : all three core rows cross the network per lookup
+    +two-level   : rows served from owner HBM, one pooled vector crosses ICI
+    +SRAM pin    : outer cores VMEM-resident — only the G2 row from HBM
+    +hot tier    : hottest G2 rows replicated (80% of requests, paper's
+                   hot-vector share) — hot contractions are all-local, so only
+                   the cold 20% still pays the pooled ICI combine
+    """
+    from repro.core.tt_embedding import dim_factors3
+
+    d1, d2, d3 = dim_factors3(dim)        # same factorization the tables use
+    w1 = d1 * rank * bytes_per_elem
+    w2 = rank * d2 * rank * bytes_per_elem
+    w3 = rank * d3 * bytes_per_elem
+    hbm, ici = HBM_BW, ICI_BW_PER_LINK * 2
+    row_out = dim * bytes_per_elem
+    base = pooling * (w1 + w2 + w3) / ici + pooling * (w1 + w2 + w3) / hbm
+    two = pooling * (w1 + w2 + w3) / hbm + row_out / ici
+    sram = pooling * w2 / hbm + row_out / ici
+    hot = pooling * w2 / hbm + 0.2 * row_out / ici
+    return base, two, sram, hot
+
+
 def run() -> None:
     b, t, bt, l = analytic_ladder()
     emit("design_opt/analytic_baseline_ns", 0.0, f"{b * 1e9:.1f}ns/bag")
@@ -113,6 +140,15 @@ def run() -> None:
          f"{bt * 1e9:.1f}ns/bag speedup={b / bt:.2f}x")
     emit("design_opt/analytic_lut", 0.0,
          f"{l * 1e9:.1f}ns/bag speedup={b / l:.2f}x (paper ladder: 1.34x/1.9x/2.2x)")
+
+    tb, tt_, ts, th = tt_analytic_ladder()
+    emit("design_opt/tt_analytic_baseline_ns", 0.0, f"{tb * 1e9:.1f}ns/bag")
+    emit("design_opt/tt_analytic_two_level", 0.0,
+         f"{tt_ * 1e9:.1f}ns/bag speedup={tb / tt_:.2f}x")
+    emit("design_opt/tt_analytic_sram_pin", 0.0,
+         f"{ts * 1e9:.1f}ns/bag speedup={tb / ts:.2f}x")
+    emit("design_opt/tt_analytic_hot_tier", 0.0,
+         f"{th * 1e9:.1f}ns/bag speedup={tb / th:.2f}x (paper TT-Rec: 2.15x)")
 
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

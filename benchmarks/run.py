@@ -10,13 +10,16 @@ import argparse
 import sys
 import time
 
-from benchmarks import collision_sweep, design_opt, locality, roofline, traffic
+from benchmarks import (
+    collision_sweep, design_opt, locality, roofline, traffic, tt_sweep,
+)
 
 SUITES = {
-    "traffic": traffic.run,            # paper: weight-sharing traffic table
-    "locality": locality.run,          # paper: Q/R temporal locality figures
-    "design_opt": design_opt.run,      # paper: design-optimization ladder
+    "traffic": traffic.run,            # paper: weight-sharing traffic table (QR + TT)
+    "locality": locality.run,          # paper: Q/R + TT-core temporal locality
+    "design_opt": design_opt.run,      # paper: design-optimization ladders
     "collision_sweep": collision_sweep.run,  # paper: shortcoming analyses
+    "tt_sweep": tt_sweep.run,          # paper: TT rank/factorization trade-off
     "roofline": roofline.run,          # deliverable (g)
 }
 
@@ -24,6 +27,8 @@ SUITES = {
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all emitted rows as JSON (perf trajectory)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
@@ -37,6 +42,10 @@ def main() -> int:
 
             traceback.print_exc()
             print(f"{n}/SUITE_FAILED,0.00,{type(e).__name__}: {e}")
+    if args.json:
+        from benchmarks import common
+
+        common.write_json(args.json)
     return 0
 
 

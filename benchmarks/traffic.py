@@ -18,9 +18,9 @@ from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
 
 
-def _bag(kind, dim, vocab=2_000_000, collision=64):
+def _bag(kind, dim, vocab=2_000_000, collision=64, tt_rank=16):
     emb = EmbeddingConfig(
-        vocab=vocab, dim=dim, kind=kind, collision=collision,
+        vocab=vocab, dim=dim, kind=kind, collision=collision, tt_rank=tt_rank,
         param_dtype=jnp.float32, compute_dtype=jnp.float32,
     )
     return BagConfig(emb=emb, pooling=32)
@@ -35,6 +35,19 @@ def run() -> None:
             f"traffic/qr_dim{dim}", 0.0,
             f"dense={t['dense']}B naive_qr={t['naive']}B fused_lut={t['fused']}B "
             f"amplification={t['naive'] / t['dense']:.2f}x",
+        )
+
+    # TT-Rec: amplification is rank-driven (core rows are r*d2*r wide — wider
+    # than the dense row at high rank), and the SRAM pin removes two of the
+    # three core fetches: the paper's Fig. 4(a) arithmetic for the TT path.
+    for rank in (8, 16, 32):
+        bag = _bag("tt", 128, tt_rank=rank)
+        t = EB.traffic_model(bag, bytes_per_elem=4)
+        emit(
+            f"traffic/tt_dim128_rank{rank}", 0.0,
+            f"dense={t['dense']}B naive_tt={t['naive']}B fused_sram={t['fused']}B "
+            f"amplification={t['naive'] / t['dense']:.2f}x "
+            f"fused_vs_dense={t['fused'] / t['dense']:.2f}x",
         )
 
     # (b) measured: dense vs naive-QR vs fused GnR on this host, in the

@@ -1,0 +1,98 @@
+"""TT-Rec rank/factorization sweep (paper Fig. 5/6 + Table 3 analog for the
+tensor-train path).
+
+Sweeps the TT rank and the vocab factorization shape and reports, per point:
+
+* compression vs the dense table (capacity story);
+* SRAM footprint of the pinned outer cores (must stay bg-PIM/VMEM sized);
+* analytic DRAM bytes per bag: dense vs naive TT (3 cores from DRAM) vs fused
+  (outer cores pinned) — the traffic-amplification trade-off that motivates
+  the SRAM cache;
+* measured wall-time of the fused Pallas bag kernel vs the jnp reference on
+  this host (ratios are the tracking target, not absolutes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.core import qr_embedding as QE, tt_embedding as TT
+from repro.core.embedding_bag import BagConfig, traffic_model
+from repro.core.qr_embedding import EmbeddingConfig
+from repro.kernels import ops, ref
+
+
+def _cfg(vocab, dim, rank, vf=None):
+    return EmbeddingConfig(
+        vocab=vocab, dim=dim, kind="tt", tt_rank=rank, tt_vocab_factors=vf,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+
+
+def rank_sweep(vocab=2_000_000, dim=128, pooling=32) -> None:
+    for rank in (4, 8, 16, 32):
+        cfg = _cfg(vocab, dim, rank)
+        spec = cfg.tt_spec
+        t = traffic_model(BagConfig(emb=cfg, pooling=pooling), bytes_per_elem=4)
+        emit(
+            f"tt_sweep/rank{rank}_dim{dim}", 0.0,
+            f"factors={spec.vocab_factors}x{spec.dim_factors} "
+            f"compression={spec.compression:.0f}x sram={spec.sram_bytes()}B "
+            f"dense={t['dense']}B naive_tt={t['naive']}B fused={t['fused']}B "
+            f"amplification={t['naive'] / t['dense']:.2f}x "
+            f"fused_vs_dense={t['fused'] / t['dense']:.2f}x",
+        )
+
+
+def factorization_sweep(vocab=2_000_000, dim=128, rank=16) -> None:
+    """Outer-factor size trades SRAM footprint against middle-core rows
+    (hot-tier granularity) at ~constant compression."""
+    for outer in (16, 38, 128, 512):
+        mid = -(-vocab // (outer * outer))
+        cfg = _cfg(vocab, dim, rank, vf=(outer, mid, outer))
+        spec = cfg.tt_spec
+        emit(
+            f"tt_sweep/factor_outer{outer}", 0.0,
+            f"factors={spec.vocab_factors} compression={spec.compression:.0f}x "
+            f"sram={spec.sram_bytes()}B mid_rows={spec.v2} "
+            f"(outer^ => sram^ but finer mid tiering)",
+        )
+
+
+def measured_kernel(vocab=65536, dim=128, rank=8, batch=256, pooling=16) -> None:
+    cfg = _cfg(vocab, dim, rank)
+    spec = cfg.tt_spec
+    params = QE.init(jax.random.PRNGKey(0), cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (batch, pooling), 0, vocab)
+    i1, i2, i3 = TT.tt_decompose(idx, spec)
+    dims = (spec.d1, spec.d2, spec.d3, spec.rank)
+
+    f_ref = jax.jit(
+        lambda p, a, b, c: ref.tt_bag_ref(p["g1"], p["g2"], p["g3"], a, b, c, dims=dims)
+    )
+    t_ref = time_jit(f_ref, params, i1, i2, i3)
+    f_kernel = lambda p, a, b, c: ops.tt_pooled(
+        p["g1"], p["g2"], p["g3"], a, b, c, dims=dims
+    )
+    t_kernel = time_jit(f_kernel, params, i1, i2, i3)
+    # jnp module-level bag (what the model path runs on CPU)
+    bag = BagConfig(emb=cfg, pooling=pooling)
+    from repro.core.embedding_bag import bag_lookup
+
+    f_mod = jax.jit(lambda p, i: bag_lookup(p, i, bag))
+    t_mod = time_jit(f_mod, params, idx)
+
+    emit("tt_sweep/measured_ref_bag", t_ref, f"batch={batch} pooling={pooling} rank={rank}")
+    emit("tt_sweep/measured_module_bag", t_mod, f"vs_ref={t_ref / t_mod:.2f}x")
+    emit(
+        "tt_sweep/measured_pallas_bag", t_kernel,
+        "interpret-mode on CPU: parity target, not a speed target",
+    )
+
+
+def run() -> None:
+    rank_sweep()
+    factorization_sweep()
+    measured_kernel()

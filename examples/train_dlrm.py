@@ -29,21 +29,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=512)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_dlrm_ckpt")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default: /tmp/repro_dlrm_ckpt_<embedding> (keyed by "
+                         "kind so switching --embedding never resumes a "
+                         "checkpoint with a mismatched table structure)")
+    ap.add_argument("--embedding", choices=["qr", "tt", "dense"], default="qr",
+                    help="weight-sharing algorithm (dense = paper baseline)")
     ap.add_argument("--dense-baseline", action="store_true",
-                    help="train the uncompressed table instead (paper baseline)")
+                    help="alias for --embedding dense (paper baseline)")
+    ap.add_argument("--tt-rank", type=int, default=16)
     args = ap.parse_args()
+    kind = "dense" if args.dense_baseline else args.embedding
+    if args.ckpt_dir is None:
+        args.ckpt_dir = f"/tmp/repro_dlrm_ckpt_{kind}"
 
     cfg = DLRMConfig(
-        name="dlrm-qr-example",
+        name=f"dlrm-{kind}-example",
         num_tables=26,
         vocab_per_table=200_000,
         dim=64,
         pooling=8,
         bottom_mlp=(256, 128, 64),
         top_mlp=(256, 128, 1),
-        embedding_kind="dense" if args.dense_baseline else "qr",
+        embedding_kind=kind,
         qr_collision=64,
+        tt_rank=args.tt_rank,
     )
     logical = cfg.num_tables * cfg.vocab_per_table * cfg.dim
     params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import dlrm_qr
 from repro.core import sharded_embedding as SE
 from repro.distributed import sharding as SH
 from repro.launch import hlo_analysis
@@ -46,7 +45,7 @@ def lower(cfg, tag: str, batch: int = 65536) -> dict:
     def table_shard(t):
         out = {}
         for k, v in t.items():
-            if k in ("q", "table"):
+            if k in ("q", "table", "g2"):
                 rows = -(-v.shape[0] // SE.ROW_PAD) * SE.ROW_PAD
                 spec = P("model", None) if rows % mesh.shape["model"] == 0 else P()
                 out[k] = NamedSharding(mesh, spec)
@@ -126,11 +125,16 @@ def lower(cfg, tag: str, batch: int = 65536) -> dict:
 
 
 def main():
-    qr = lower(dlrm_qr.CONFIG, "qr")
-    dense = lower(dlrm_qr.DENSE_BASELINE, "dense")
+    from repro.configs import registry
+
+    qr = lower(registry.get_dlrm("dlrm-qr"), "qr")
+    tt = lower(registry.get_dlrm("dlrm-tt"), "tt")
+    dense = lower(registry.get_dlrm("dlrm-dense"), "dense")
     m_qr = qr["hlo"]["bytes"] / 819e9
+    m_tt = tt["hlo"]["bytes"] / 819e9
     m_d = dense["hlo"]["bytes"] / 819e9
-    print(f"memory term: dense {m_d*1000:.1f} ms vs qr {m_qr*1000:.1f} ms per step "
+    print(f"memory term: dense {m_d*1000:.1f} ms vs qr {m_qr*1000:.1f} ms vs "
+          f"tt {m_tt*1000:.1f} ms per step "
           f"(capacity {dense['params_total']/qr['params_total']:.0f}x larger dense)")
 
 

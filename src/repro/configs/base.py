@@ -55,9 +55,13 @@ class ModelConfig:
     num_patches: int = 0
 
     # the paper's technique knob (applies to vocab embedding + tied head)
-    embedding_kind: str = "dense"      # dense | hashed | qr
+    embedding_kind: str = "dense"      # dense | hashed | qr | tt
     qr_collision: int = 64
     hot_fraction: float = 0.0
+    # TT-Rec knobs (embedding_kind="tt")
+    tt_rank: int = 16
+    tt_vocab_factors: tuple[int, int, int] | None = None
+    tt_dim_factors: tuple[int, int, int] | None = None
     # execution-scheme knobs (hillclimb / §Perf switches)
     qr_head: str = "factorized"        # factorized | materialize (paper-faithful)
     embedding_exec: str = "gspmd"      # gspmd | twolevel (the PIM scheme)
@@ -95,6 +99,9 @@ class ModelConfig:
             compute_dtype=self.cdtype,
             hot_fraction=self.hot_fraction,
             head=self.qr_head,
+            tt_rank=self.tt_rank,
+            tt_vocab_factors=self.tt_vocab_factors,
+            tt_dim_factors=self.tt_dim_factors,
         )
 
     def replace(self, **kw) -> "ModelConfig":
@@ -130,9 +137,13 @@ class DLRMConfig:
     num_dense: int = 13
     bottom_mlp: tuple[int, ...] = (512, 256, 128)
     top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
-    embedding_kind: str = "qr"
+    embedding_kind: str = "qr"         # dense | hashed | qr | tt
     qr_collision: int = 64
     hot_request_share: float = 0.8     # paper's hot-vector definition
+    # TT-Rec knobs (embedding_kind="tt")
+    tt_rank: int = 16
+    tt_vocab_factors: tuple[int, int, int] | None = None
+    tt_dim_factors: tuple[int, int, int] | None = None
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 

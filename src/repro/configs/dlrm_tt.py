@@ -1,0 +1,34 @@
+"""dlrm-tt — DLRM with TT-Rec (tensor-train) embedding tables, the paper's
+second weight-sharing target (2.15x speedup case).
+
+Factorization: vocab 2M -> (38, 1386, 38) (auto, asymmetric: SRAM-sized outer
+cores, bulk in the streamed middle core), dim 128 -> (4, 8, 4), rank 16.
+Physical: ~2.9M elements per table vs 256M dense (~88x compression); the
+pinned outer cores are ~19 KB/table — comfortably bg-PIM-SRAM / VMEM sized.
+"""
+
+from repro.configs.base import DLRMConfig
+
+CONFIG = DLRMConfig(
+    name="dlrm-tt",
+    num_tables=26,
+    vocab_per_table=2_000_000,
+    dim=128,                       # same sweep point as dlrm-qr
+    pooling=32,
+    embedding_kind="tt",
+    tt_rank=16,
+)
+
+# The dense baseline lives in dlrm_qr.DENSE_BASELINE (registry id "dlrm-dense").
+
+SMOKE = DLRMConfig(
+    name="dlrm-tt-smoke",
+    num_tables=4,
+    vocab_per_table=4096,
+    dim=32,
+    pooling=8,
+    bottom_mlp=(64, 32),
+    top_mlp=(64, 1),
+    embedding_kind="tt",
+    tt_rank=4,
+)

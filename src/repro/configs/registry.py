@@ -59,6 +59,28 @@ def get(arch_id: str) -> ArchBinding:
 
 
 # ---------------------------------------------------------------------------
+# DLRM (the paper's own model) registry: --config ids -> DLRMConfig objects
+# ---------------------------------------------------------------------------
+
+# name -> (repro.configs module, attribute)
+DLRM_CONFIGS: dict[str, tuple[str, str]] = {
+    "dlrm-qr": ("dlrm_qr", "CONFIG"),
+    "dlrm-qr-smoke": ("dlrm_qr", "SMOKE"),
+    "dlrm-dense": ("dlrm_qr", "DENSE_BASELINE"),
+    "dlrm-tt": ("dlrm_tt", "CONFIG"),
+    "dlrm-tt-smoke": ("dlrm_tt", "SMOKE"),
+}
+
+
+def get_dlrm(name: str):
+    """Resolve a DLRM config id (scripts/dlrm_dryrun.py selects by name)."""
+    if name not in DLRM_CONFIGS:
+        raise KeyError(f"unknown dlrm config {name!r}; choose from {sorted(DLRM_CONFIGS)}")
+    module, attr = DLRM_CONFIGS[name]
+    return getattr(importlib.import_module(f"repro.configs.{module}"), attr)
+
+
+# ---------------------------------------------------------------------------
 # shape grid + skip rules
 # ---------------------------------------------------------------------------
 

@@ -101,6 +101,14 @@ def traffic_model(bag: BagConfig, bytes_per_elem: int = 2) -> dict:
     if emb.kind == "hashed":
         naive = p * emb.hashed_k * row
         return {"dense": dense, "naive": naive, "fused": naive}  # no tiny LUT to pin
+    if emb.kind == "tt":
+        spec = emb.tt_spec
+        w1 = spec.g1_width * bytes_per_elem
+        w2 = spec.g2_width * bytes_per_elem
+        w3 = spec.g3_width * bytes_per_elem
+        naive = p * (w1 + w2 + w3)           # all three cores from DRAM
+        fused = p * w2                       # outer cores pinned in VMEM/SRAM
+        return {"dense": dense, "naive": naive, "fused": fused}
     naive = 2 * p * row                      # Q row + R row per index
     fused = p * row                          # R served from VMEM LUT
     return {"dense": dense, "naive": naive, "fused": fused}

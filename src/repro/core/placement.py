@@ -121,6 +121,89 @@ def split_table(table: jax.Array, plan: TierPlan) -> tuple[jax.Array, jax.Array]
     return hot, cold
 
 
+# ---------------------------------------------------------------------------
+# TT-Rec tiered placement (the paper's bg-PIM SRAM cache + subtable duplication)
+# ---------------------------------------------------------------------------
+
+# Default per-core SRAM budget: the paper's bg-PIM cache is a few hundred KB;
+# on TPU the analogue is a slice of the ~16 MB VMEM left over by the kernel's
+# working set.  Outer cores must fit it *whole* for the pin to be legal.
+DEFAULT_SRAM_BUDGET = 512 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TTTierPlan:
+    """Placement decision for one TT table.
+
+    The outer cores (G1/G3) are duplicated whole into every bank group's SRAM
+    (VMEM pin + replication across chips): their intra-GnR locality is
+    structural — every lookup touches them — so duplication removes both the
+    DRAM traffic and the CPU-PIM combine for two of the three contraction
+    operands.  The middle core is the "big table": its rows are row-sharded,
+    and the hottest rows (by i2 request skew) are replicated as the hot tier,
+    exactly the Q-table treatment on the QR path.
+    """
+
+    mid_plan: TierPlan          # hot tier over middle-core (i2) rows
+    sram_bytes: int             # G1 + G3 pinned footprint per replica
+    sram_budget: int            # budget the pin was checked against
+    duplication: int            # replicas of the outer cores ("bank groups")
+
+    @property
+    def sram_fits(self) -> bool:
+        return self.sram_bytes <= self.sram_budget
+
+    @property
+    def num_hot(self) -> int:
+        return self.mid_plan.num_hot
+
+
+def fold_counts_tt(counts_logical: np.ndarray, spec) -> np.ndarray:
+    """Fold a logical-row access profile onto middle-core (i2) rows.
+
+    ``i2 = (idx // v3) % v2`` — each middle row serves ``v1 * v3`` logical
+    rows, so, like quotient folding, hot logical rows stay hot but the hot
+    *set* shrinks sub-linearly (they rarely cluster into the same i2).
+    """
+    counts_logical = np.asarray(counts_logical, dtype=np.int64)
+    idx = np.arange(counts_logical.size, dtype=np.int64)
+    i2 = (idx // spec.v3) % spec.v2
+    return np.bincount(i2, weights=counts_logical, minlength=spec.v2).astype(np.int64)
+
+
+def plan_tt_tiers(
+    counts_logical: np.ndarray,
+    spec,
+    *,
+    request_share: float | None = None,
+    hot_fraction: float | None = None,
+    max_hot_rows: int | None = None,
+    sram_budget: int = DEFAULT_SRAM_BUDGET,
+    bytes_per_elem: int = 4,
+    duplication: int = 1,
+) -> TTTierPlan:
+    """TT-aware tier plan from a logical access profile.
+
+    SRAM-pins the outer cores (checked against ``sram_budget``), hot-tiers the
+    middle core by folded i2 skew.  ``duplication`` is the bank-group replica
+    count of the pinned cores (paper: duplication across bank groups kills the
+    CPU-PIM communication; on TPU it is replication across chips).
+    """
+    folded = fold_counts_tt(counts_logical, spec)
+    mid = plan_tiers(
+        folded,
+        request_share=request_share,
+        hot_fraction=hot_fraction,
+        max_hot_rows=max_hot_rows,
+    )
+    return TTTierPlan(
+        mid_plan=mid,
+        sram_bytes=spec.sram_bytes(bytes_per_elem),
+        sram_budget=sram_budget,
+        duplication=duplication,
+    )
+
+
 def hot_vector_reduction_curve(
     counts_logical: np.ndarray, collisions: list[int], request_share: float = 0.8
 ) -> dict[int, int]:

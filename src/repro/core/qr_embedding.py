@@ -1,4 +1,6 @@
-"""Weight-sharing embedding modules (dense / hashed / quotient–remainder).
+"""Weight-sharing embedding modules (dense / hashed / quotient–remainder /
+tensor-train — the TT path lives in ``repro.core.tt_embedding`` and is routed
+through the same ``init`` / ``lookup`` / ``param_axes`` entry points here).
 
 Functional style: ``init(key, cfg) -> params``, ``lookup(params, idx, cfg)``.
 Params are plain dict pytrees; logical sharding axes are provided by
@@ -20,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import hashing
 
-EmbeddingKind = Literal["dense", "hashed", "qr"]
+EmbeddingKind = Literal["dense", "hashed", "qr", "tt"]
 Reconstruction = Literal["add", "mul", "concat"]
 
 # Physical row counts are padded so mesh axes divide them (odd vocabs like
@@ -49,10 +51,22 @@ class EmbeddingConfig:
     # Tied-head mode: "factorized" (beyond-paper FLOP cut) or "materialize"
     # (paper-faithful: logits against the reconstructed logical table).
     head: str = "factorized"
+    # TT-Rec knobs (kind="tt"): core rank and optional explicit factorizations
+    # i -> (i1,i2,i3) / dim -> (d1,d2,d3); None = auto (asymmetric vocab split,
+    # balanced dim split — see repro.core.tt_embedding).
+    tt_rank: int = 16
+    tt_vocab_factors: tuple[int, int, int] | None = None
+    tt_dim_factors: tuple[int, int, int] | None = None
 
     @property
     def qr_spec(self) -> hashing.QRSpec:
         return hashing.QRSpec(vocab=self.vocab, collision=self.collision, dim=self.dim)
+
+    @property
+    def tt_spec(self):
+        from repro.core import tt_embedding
+
+        return tt_embedding.spec_for(self)
 
     @property
     def physical_hashed_rows(self) -> int:
@@ -63,6 +77,8 @@ class EmbeddingConfig:
             return self.vocab * self.dim
         if self.kind == "hashed":
             return self.physical_hashed_rows * self.dim
+        if self.kind == "tt":
+            return self.tt_spec.param_count()
         spec = self.qr_spec
         if self.reconstruction == "concat":
             return (spec.q_rows + spec.r_rows) * (self.dim // 2)
@@ -74,6 +90,10 @@ class EmbeddingConfig:
 # ---------------------------------------------------------------------------
 
 def init(key: jax.Array, cfg: EmbeddingConfig) -> dict:
+    if cfg.kind == "tt":
+        from repro.core import tt_embedding
+
+        return tt_embedding.init(key, cfg)
     scale = cfg.dim ** -0.5
     if cfg.kind == "dense":
         return {
@@ -107,6 +127,10 @@ def param_axes(cfg: EmbeddingConfig) -> dict:
     """
     if cfg.kind in ("dense", "hashed"):
         return {"table": ("vocab", "embed")}
+    if cfg.kind == "tt":
+        from repro.core import tt_embedding
+
+        return tt_embedding.param_axes(cfg)
     return {"q": ("qrow", "embed"), "r": ("rrow", "embed")}
 
 
@@ -116,6 +140,10 @@ def param_axes(cfg: EmbeddingConfig) -> dict:
 
 def lookup(params: dict, idx: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
     """Logical-row lookup ``idx -> (..., dim)`` with weight-sharing expansion."""
+    if cfg.kind == "tt":
+        from repro.core import tt_embedding
+
+        return tt_embedding.lookup(params, idx, cfg)
     if cfg.kind == "dense":
         return params["table"].astype(cfg.compute_dtype)[idx]
     if cfg.kind == "hashed":
@@ -164,6 +192,10 @@ def logits_head(params: dict, x: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
         )  # (vocab, k)
         small = x @ table.T  # (..., rows)
         return small[..., hs].sum(axis=-1)
+    if cfg.kind == "tt":
+        # TT head: logits against the reconstructed table (paper-faithful; a
+        # factorized TT head would chain three small matmuls — future work).
+        return x @ materialize(params, cfg).T
     if cfg.reconstruction != "add" or cfg.head == "materialize":
         # mul/concat heads — and the paper-faithful mode — materialize the
         # logical (vocab, dim) table and matmul against it.

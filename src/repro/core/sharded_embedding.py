@@ -32,13 +32,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import hashing
 from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
+from repro.distributed import jax_compat
 
 # Q tables are padded so every potential model-axis size divides the row count.
 ROW_PAD = 128
 
 
 def padded_q_rows(cfg: EmbeddingConfig) -> int:
-    rows = cfg.qr_spec.q_rows if cfg.kind == "qr" else cfg.vocab
+    """Padded rows of the row-sharded ("big") table: Q for the QR path, the
+    middle core G2 for the TT path, the whole table otherwise."""
+    if cfg.kind == "qr":
+        rows = cfg.qr_spec.q_rows
+    elif cfg.kind == "tt":
+        rows = cfg.tt_spec.v2
+    else:
+        rows = cfg.vocab
     return -(-rows // ROW_PAD) * ROW_PAD
 
 
@@ -134,6 +142,60 @@ def qr_bag_partial(
     return rows.sum(axis=-2)
 
 
+def tt_bag_partial(
+    g1_full: jax.Array,
+    g2_shard: jax.Array,
+    g3_full: jax.Array,
+    idx: jax.Array,
+    plan: ShardPlan,
+    *,
+    axis: str = "model",
+    hot_table: jax.Array | None = None,
+    hot_slot: jax.Array | None = None,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Local pooled partial for one TT bag. idx: (..., pooling) -> (..., dim).
+
+    Tier routing mirrors the QR path, applied to the *middle core*:
+      hot  -> replicated hot-G2 rows, spread across shards by bag position;
+      cold -> owner shard's local G2 row shard;
+      G1/G3 -> duplicated whole on every shard (the bg-PIM SRAM pin), so the
+               full chained contraction runs where the G2 row lives and only
+               the pooled vector crosses the network (one psum by the caller).
+    Correctness rests on the contraction being *linear in G2*: zeroed
+    non-owned rows contribute exactly zero to the psum — the TT analogue of
+    the QR add-associativity argument.
+    """
+    from repro.core import tt_embedding
+
+    cfg = plan.cfg
+    spec = cfg.tt_spec
+    shard = jax.lax.axis_index(axis)
+    nsh = plan.num_shards
+    i1, i2, i3 = tt_embedding.tt_decompose(idx, spec)
+    pooling = idx.shape[-1]
+    pos_mine = (jnp.arange(pooling, dtype=jnp.int32) % nsh) == shard
+
+    compute = cfg.compute_dtype
+    if hot_table is not None:
+        slot = hot_slot[i2]                          # (..., pooling)
+        is_hot = slot >= 0
+        hot_rows = hot_table.astype(compute)[jnp.clip(slot, 0)]
+        hot_rows = hot_rows * (is_hot & pos_mine)[..., None].astype(compute)
+        cold_rows = _owned_rows_gather(g2_shard.astype(compute), i2, plan, axis)
+        cold_rows = cold_rows * (~is_hot)[..., None].astype(compute)
+        g2_rows = hot_rows + cold_rows
+    else:
+        g2_rows = _owned_rows_gather(g2_shard.astype(compute), i2, plan, axis)
+
+    rows = tt_embedding.contract_rows(
+        g1_full.astype(compute)[i1], g2_rows, g3_full.astype(compute)[i3], spec
+    )
+    if weights is not None:
+        rows = rows * weights[..., None].astype(compute)
+    return rows.sum(axis=-2)
+
+
 def dense_bag_partial(
     table_shard: jax.Array,
     idx: jax.Array,
@@ -200,6 +262,13 @@ def shard_qr_params(
             pad_q_table(params["q"], cfg), NamedSharding(mesh, P(row_axis, None))
         )
         out["r"] = jax.device_put(params["r"], NamedSharding(mesh, P()))  # LUT tier
+    elif "g2" in params:
+        # TT: middle core row-sharded, outer cores duplicated (SRAM tier)
+        out["g2"] = jax.device_put(
+            pad_q_table(params["g2"], cfg), NamedSharding(mesh, P(row_axis, None))
+        )
+        out["g1"] = jax.device_put(params["g1"], NamedSharding(mesh, P()))
+        out["g3"] = jax.device_put(params["g3"], NamedSharding(mesh, P()))
     else:
         out["table"] = jax.device_put(
             pad_q_table(params["table"], cfg), NamedSharding(mesh, P(row_axis, None))
@@ -239,6 +308,13 @@ def build_multi_bag_gnr(
                     hot_table=None if tier is None else tier["hot_table"],
                     hot_slot=None if tier is None else tier["hot_slot"],
                 )
+            elif bag.emb.kind == "tt":
+                part = tt_bag_partial(
+                    params["g1"], params["g2"], params["g3"], idx, plan,
+                    axis=row_axis,
+                    hot_table=None if tier is None else tier["hot_table"],
+                    hot_slot=None if tier is None else tier["hot_slot"],
+                )
             else:
                 part = dense_bag_partial(params["table"], idx, plan, axis=row_axis)
             if bag.combiner == "mean":
@@ -250,6 +326,8 @@ def build_multi_bag_gnr(
     def table_specs(bag):
         if bag.emb.kind == "qr":
             return {"q": P(row_axis, None), "r": P()}
+        if bag.emb.kind == "tt":
+            return {"g1": P(), "g2": P(row_axis, None), "g3": P()}
         return {"table": P(row_axis, None)}
 
     in_specs = (
@@ -261,7 +339,7 @@ def build_multi_bag_gnr(
 
     @jax.jit
     def fn(tables, indices, hot_tiers=None):
-        return jax.shard_map(
+        return jax_compat.shard_map(
             local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )(tables, indices, hot_tiers)
@@ -305,7 +383,7 @@ def build_token_embed(
 
     @jax.jit
     def fn(params, idx, tier=None):
-        return jax.shard_map(
+        return jax_compat.shard_map(
             local_fn, mesh=mesh, in_specs=in_specs,
             out_specs=P(batch_axis, None, None), check_vma=False,
         )(params, idx, tier)
@@ -373,7 +451,7 @@ def token_embed_inline(params: dict, idx: jax.Array, cfg: EmbeddingConfig,
         part = qr_token_partial(q_shard, r_full, idx_l, plan, axis=row_axis)
         return jax.lax.psum(part, row_axis)
 
-    return jax.shard_map(
+    return jax_compat.shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(row_axis, None), P(), P(batch_spec, None)),

@@ -1,0 +1,253 @@
+"""TT-Rec embedding tables — tensor-train weight sharing (Yin et al. '21).
+
+The paper's second target algorithm (2.15x speedup case): a logical table
+``(vocab, dim)`` is factorized into a 3-core tensor train.  Logical row ``i``
+decomposes as ``i -> (i1, i2, i3)`` over vocab factors ``(v1, v2, v3)`` and is
+reconstructed by the chained contraction
+
+    W[i] = G1[i1] @ G2[i2] @ G3[i3]          # (d1,r) @ (r,d2,r) @ (r,d3)
+
+reshaped to ``dim = d1*d2*d3``.  The factorization is deliberately
+*asymmetric*: the outer factors ``v1, v3`` are tiny (~vocab**0.25) so the
+outer cores fit in per-PIM SRAM (VMEM on TPU — the bg-PIM cache analogue),
+while the middle core carries the bulk of the rows (~vocab**0.5) and is the
+streamed / tiered / row-sharded "big table", exactly the role the Q table
+plays on the QR path.  Intra-GnR locality is structural here: every lookup
+touches G1 and G3, so their reuse within one bag is ~pooling-fold — the
+locality the paper prefetches into the bg-PIM SRAM cache.
+
+Functional style matching ``qr_embedding``: ``init(key, cfg) -> params``,
+``lookup(params, idx, cfg) -> (..., dim)``, ``param_axes(cfg)``.  Params are
+``{"g1", "g2", "g3"}``; every core is stored 2-D ``(rows, flat_width)`` so the
+existing row-sharding / checkpoint / kernel machinery applies unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+# Same physical-row padding contract as qr_embedding: mesh axes divide rows.
+ROW_PAD = 128
+
+
+def _pad_rows(rows: int) -> int:
+    return -(-rows // ROW_PAD) * ROW_PAD
+
+
+# ---------------------------------------------------------------------------
+# factorization
+# ---------------------------------------------------------------------------
+
+def dim_factors3(dim: int) -> tuple[int, int, int]:
+    """Exact 3-way factorization of ``dim``, most balanced, largest in the
+    middle (the middle core's width is quadratic in rank; giving it the big
+    dim factor keeps the *outer* SRAM cores small)."""
+    best: tuple[int, int, int] | None = None
+    for a in range(1, dim + 1):
+        if dim % a:
+            continue
+        rest = dim // a
+        for b in range(a, rest + 1):
+            if rest % b:
+                continue
+            c = rest // b
+            if c < b:
+                continue
+            tri = (a, b, c)
+            if best is None or sum(tri) < sum(best):
+                best = tri
+    assert best is not None
+    lo, mid, hi = best
+    return (mid, hi, lo)
+
+
+def vocab_factors3(vocab: int) -> tuple[int, int, int]:
+    """Covering factorization ``v1*v2*v3 >= vocab`` with SRAM-sized outer
+    factors (~vocab**0.25) and the bulk in the middle core — the paper's
+    small-subtable / big-subtable split for TT-Rec."""
+    outer = max(2, math.ceil(vocab ** 0.25))
+    mid = math.ceil(vocab / (outer * outer))
+    return (outer, mid, outer)
+
+
+@dataclasses.dataclass(frozen=True)
+class TTSpec:
+    """Static shape spec of a 3-core tensor-train factorization."""
+
+    vocab: int
+    dim: int
+    rank: int
+    vocab_factors: tuple[int, int, int]
+    dim_factors: tuple[int, int, int]
+
+    def __post_init__(self):
+        v1, v2, v3 = self.vocab_factors
+        d1, d2, d3 = self.dim_factors
+        if v1 * v2 * v3 < self.vocab:
+            raise ValueError(
+                f"vocab factors {self.vocab_factors} cover only {v1 * v2 * v3} "
+                f"< vocab {self.vocab}"
+            )
+        if d1 * d2 * d3 != self.dim:
+            raise ValueError(
+                f"dim factors {self.dim_factors} must multiply to dim {self.dim}"
+            )
+
+    # vocab / dim factor accessors
+    @property
+    def v1(self) -> int: return self.vocab_factors[0]
+    @property
+    def v2(self) -> int: return self.vocab_factors[1]
+    @property
+    def v3(self) -> int: return self.vocab_factors[2]
+    @property
+    def d1(self) -> int: return self.dim_factors[0]
+    @property
+    def d2(self) -> int: return self.dim_factors[1]
+    @property
+    def d3(self) -> int: return self.dim_factors[2]
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.v1 * self.v2 * self.v3
+
+    # flat core widths (the last axis of each stored 2-D core)
+    @property
+    def g1_width(self) -> int: return self.d1 * self.rank
+    @property
+    def g2_width(self) -> int: return self.rank * self.d2 * self.rank
+    @property
+    def g3_width(self) -> int: return self.rank * self.d3
+
+    @property
+    def g2_rows_padded(self) -> int:
+        return _pad_rows(self.v2)
+
+    def param_count(self) -> int:
+        """Physical elements (middle core padded, matching ``init`` leaves)."""
+        return (
+            self.v1 * self.g1_width
+            + self.g2_rows_padded * self.g2_width
+            + self.v3 * self.g3_width
+        )
+
+    @property
+    def compression(self) -> float:
+        return (self.vocab * self.dim) / self.param_count()
+
+    def sram_bytes(self, bytes_per_elem: int = 4) -> int:
+        """Footprint of the VMEM/SRAM-pinned outer cores (G1 + G3) — the thing
+        the paper prefetches into the bg-PIM SRAM cache.  Must stay small
+        (tens-to-hundreds of KB) for the pin to be legal."""
+        return (self.v1 * self.g1_width + self.v3 * self.g3_width) * bytes_per_elem
+
+    def streamed_bytes_per_lookup(self, bytes_per_elem: int = 4) -> int:
+        """DRAM bytes per lookup once the outer cores are pinned: one G2 row."""
+        return self.g2_width * bytes_per_elem
+
+
+def spec_for(cfg) -> TTSpec:
+    """Build the TTSpec from an ``EmbeddingConfig`` with kind='tt'."""
+    return TTSpec(
+        vocab=cfg.vocab,
+        dim=cfg.dim,
+        rank=cfg.tt_rank,
+        vocab_factors=cfg.tt_vocab_factors or vocab_factors3(cfg.vocab),
+        dim_factors=cfg.tt_dim_factors or dim_factors3(cfg.dim),
+    )
+
+
+# ---------------------------------------------------------------------------
+# index factorization
+# ---------------------------------------------------------------------------
+
+def tt_decompose(idx: jax.Array, spec: TTSpec) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Logical index -> (i1, i2, i3) core-row indices (int32).
+
+    Mixed-radix over ``(v1, v2, v3)``: ``idx = (i1*v2 + i2)*v3 + i3`` — unique
+    per logical row, the TT analogue of the QR complementary partition.
+    """
+    idx = idx.astype(jnp.int32)
+    i3 = idx % spec.v3
+    rest = idx // spec.v3
+    i2 = rest % spec.v2
+    i1 = rest // spec.v2
+    return i1, i2, i3
+
+
+# ---------------------------------------------------------------------------
+# init / axes
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg) -> dict:
+    """Three 2-D cores; middle-core rows padded for row-sharding.
+
+    Scale: a reconstructed element is a sum of ``rank**2`` products of three
+    core entries, so core std ``(dim * rank**2) ** (-1/6)`` gives the
+    reconstructed table the usual ``dim**-0.5``-scale entries.
+    """
+    spec = spec_for(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = (cfg.dim * spec.rank ** 2) ** (-1.0 / 6.0)
+    return {
+        "g1": jax.random.normal(k1, (spec.v1, spec.g1_width), cfg.param_dtype) * scale,
+        "g2": jax.random.normal(
+            k2, (spec.g2_rows_padded, spec.g2_width), cfg.param_dtype
+        ) * scale,
+        "g3": jax.random.normal(k3, (spec.v3, spec.g3_width), cfg.param_dtype) * scale,
+    }
+
+
+def param_axes(cfg) -> dict:
+    """Middle core rows ride the "bank-group" partition axis (same logical
+    name as the Q table so the existing rules tables map it); outer cores are
+    the replicated SRAM tier (same logical name as the R LUT)."""
+    return {
+        "g1": ("rrow", "embed"),
+        "g2": ("qrow", "embed"),
+        "g3": ("rrow", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# lookup (reference, pure-jnp; the fused Pallas kernel is repro.kernels.tt_gather)
+# ---------------------------------------------------------------------------
+
+def contract_rows(
+    a_rows: jax.Array, b_rows: jax.Array, c_rows: jax.Array, spec: TTSpec
+) -> jax.Array:
+    """Chained TT contraction on gathered flat core rows.
+
+    a_rows: (..., d1*r); b_rows: (..., r*d2*r); c_rows: (..., r*d3)
+    -> (..., d1*d2*d3) with index layout ``(d1-major, d2, d3-minor)``.
+    Linear in ``b_rows`` — which is what legalizes the sharded partial-GnR:
+    zeroed non-owned G2 rows contribute exactly zero.
+    """
+    lead = a_rows.shape[:-1]
+    a = a_rows.reshape(*lead, spec.d1, spec.rank)
+    b = b_rows.reshape(*lead, spec.rank, spec.d2, spec.rank)
+    c = c_rows.reshape(*lead, spec.rank, spec.d3)
+    out = jnp.einsum("...ap,...pbq,...qc->...abc", a, b, c)
+    return out.reshape(*lead, spec.dim)
+
+
+def lookup(params: dict, idx: jax.Array, cfg) -> jax.Array:
+    """Logical-row lookup ``idx -> (..., dim)`` via the 3-core contraction."""
+    spec = spec_for(cfg)
+    i1, i2, i3 = tt_decompose(idx, spec)
+    compute = cfg.compute_dtype
+    a = params["g1"].astype(compute)[i1]
+    b = params["g2"].astype(compute)[i2]
+    c = params["g3"].astype(compute)[i3]
+    return contract_rows(a, b, c, spec)
+
+
+def materialize(params: dict, cfg) -> jax.Array:
+    """Reconstruct the full logical table ``(vocab, dim)`` (test oracle /
+    paper-faithful tied head)."""
+    all_idx = jnp.arange(cfg.vocab, dtype=jnp.int32)
+    return lookup(params, all_idx, cfg)

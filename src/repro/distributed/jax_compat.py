@@ -1,0 +1,40 @@
+"""Version compatibility shims for the jax APIs this repo leans on.
+
+The codebase targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``)
+but must also run on older runtimes (0.4.x) where ``shard_map`` still lives in
+``jax.experimental`` with the ``check_rep`` spelling and meshes have no
+``axis_types``.  Every mesh / shard_map call site goes through this module so
+the difference is absorbed in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with graceful fallback to the experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` with fallback to ``jax.tree_util``."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -7,6 +7,9 @@ jit'd surface with shape dispatch and CPU fallbacks.
                          (the paper's shared-table-in-SRAM mechanism)
 * ``gnr_bag``          — pooled gather-and-reduce bag with fp32 VMEM
                          accumulator (the bank-group partial-GnR unit)
+* ``tt_gather``        — fused TT-Rec gather-contract bag: outer cores pinned
+                         in VMEM (bg-PIM SRAM cache), middle core streamed by
+                         scalar-prefetched index, fp32 chained contraction
 * ``flash_attention``  — VMEM-resident online-softmax attention (kills the
                          dominant memory-roofline term; see EXPERIMENTS §Perf)
 """

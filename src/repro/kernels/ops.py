@@ -75,6 +75,60 @@ def gnr_pooled(
     return out.reshape(*lead, dim)
 
 
+def tt_pooled(
+    g1: jax.Array,
+    g2: jax.Array,
+    g3: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    i3: jax.Array,
+    *,
+    dims: tuple[int, int, int, int],
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pooled TT-Rec bag for index shape (..., K) -> (..., D).
+
+    ``dims`` = (d1, d2, d3, rank).  Dims with no 8-aligned output tile fall
+    back to the jnp reference (assigned configs all have 128-aligned dims).
+    """
+    from repro.kernels import tt_gather as _tt
+
+    interpret = _interpret_default() if interpret is None else interpret
+    d1, d2, d3, _ = dims
+    dim = d1 * d2 * d3
+    if dim % 8:
+        return ref.tt_bag_ref(g1, g2, g3, i1, i2, i3, dims=dims)
+    *lead, k = i1.shape
+    out = _tt.tt_bag(
+        g1, g2, g3,
+        i1.reshape(-1, k), i2.reshape(-1, k), i3.reshape(-1, k),
+        dims=dims, interpret=interpret,
+    )
+    return out.reshape(*lead, dim)
+
+
+def tt_lookup(
+    g1: jax.Array,
+    g2: jax.Array,
+    g3: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    i3: jax.Array,
+    *,
+    dims: tuple[int, int, int, int],
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused unpooled TT reconstruction for any index shape: (...,) -> (..., D)."""
+    shape = i1.shape
+    out = tt_pooled(
+        g1, g2, g3,
+        i1.reshape(-1, 1), i2.reshape(-1, 1), i3.reshape(-1, 1),
+        dims=dims, interpret=interpret,
+    )
+    d1, d2, d3, _ = dims
+    return out.reshape(*shape, d1 * d2 * d3)
+
+
 def gnr_pooled_dense(
     table: jax.Array, idx: jax.Array, *, interpret: bool | None = None
 ) -> jax.Array:

@@ -33,6 +33,39 @@ def dense_bag_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
     return table[idx].astype(jnp.float32).sum(axis=-2).astype(table.dtype)
 
 
+def tt_row_ref(
+    g1: jax.Array, g2: jax.Array, g3: jax.Array,
+    i1: jax.Array, i2: jax.Array, i3: jax.Array,
+    *, dims: tuple[int, int, int, int],
+) -> jax.Array:
+    """Unpooled TT reconstruction (fp32 contraction):
+    out[n] = G1[i1[n]] · G2[i2[n]] · G3[i3[n]] reshaped to d1*d2*d3."""
+    d1, d2, d3, rank = dims
+    a = g1[i1].astype(jnp.float32).reshape(*i1.shape, d1, rank)
+    b = g2[i2].astype(jnp.float32).reshape(*i2.shape, rank, d2, rank)
+    c = g3[i3].astype(jnp.float32).reshape(*i3.shape, rank, d3)
+    rows = jnp.einsum("...ap,...pbq,...qc->...abc", a, b, c)
+    return rows.reshape(*i1.shape, d1 * d2 * d3).astype(g2.dtype)
+
+
+def tt_bag_ref(
+    g1: jax.Array, g2: jax.Array, g3: jax.Array,
+    i1: jax.Array, i2: jax.Array, i3: jax.Array,
+    *, dims: tuple[int, int, int, int],
+) -> jax.Array:
+    """Pooled TT bag: out[b] = Σ_k G1[i1[b,k]]·G2[i2[b,k]]·G3[i3[b,k]].
+
+    Contraction and accumulation in fp32 regardless of core dtype (kernel
+    matches this; no intermediate round-trip through the core dtype)."""
+    d1, d2, d3, rank = dims
+    a = g1[i1].astype(jnp.float32).reshape(*i1.shape, d1, rank)
+    b = g2[i2].astype(jnp.float32).reshape(*i2.shape, rank, d2, rank)
+    c = g3[i3].astype(jnp.float32).reshape(*i3.shape, rank, d3)
+    rows = jnp.einsum("...ap,...pbq,...qc->...abc", a, b, c)
+    rows = rows.reshape(*i1.shape, d1 * d2 * d3)
+    return rows.sum(axis=-2).astype(g2.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Naive full-matrix attention oracle with GQA (fp32 softmax)."""
     b, h, sq, d = q.shape

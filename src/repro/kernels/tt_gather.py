@@ -1,0 +1,109 @@
+"""Fused TT-Rec gather-contract bag kernel (the paper's TT path on TPU).
+
+One pooled TT lookup = one HBM row DMA (the middle core G2) + two VMEM reads
+(the outer cores) + two tiny matmuls.  The naive TT implementation gathers
+three cores from main memory per lookup and ships partial contractions over
+the CPU-PIM link; this kernel is the paper's TT execution expressed in the
+TPU memory hierarchy:
+
+* ``g1`` / ``g3`` — whole outer cores mapped into VMEM once (constant
+  BlockSpec index maps, resident across all grid steps): the bg-PIM SRAM
+  cache holding the high-intra-GnR-locality subtables;
+* ``g2``          — stays in HBM; each grid step DMAs exactly the row named by
+  the scalar-prefetched ``i2`` (``PrefetchScalarGridSpec``), so indices run
+  ahead of data and Pallas double-buffers step ``k+1``'s DMA behind step
+  ``k``'s contraction — the proactive-prefetch analogue;
+* the chained contraction ``(d1,r)@(r,d2*r)`` then ``(d1*d2,r)@(r,d3)`` runs
+  between DMAs, and the per-bag sum accumulates in an fp32 VMEM block that is
+  revisited across the K grid steps (bank-group MAC + register file) — the
+  subtable-duplication move that removes the CPU-side combine.
+
+Grid ``(B, K)``: one step per bag element.  The embedding dim is NOT tiled —
+the contraction needs the whole G2 row, and TT dims are small by construction
+(``dim <= 1024`` for every recommendation config here), so one output block
+per bag stays far under the VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    i1_ref, i2_ref, i3_ref,      # scalar-prefetched (B, K) index maps
+    g2_row_ref,                  # (1, r*d2*r) — the streamed middle-core row
+    g1_ref,                      # (v1, d1*r)  — VMEM-resident outer core
+    g3_ref,                      # (v3, r*d3)  — VMEM-resident outer core
+    out_ref,                     # (1, d1*d2*d3) fp32 accumulator
+    *,
+    d1: int, d2: int, d3: int, rank: int,
+):
+    b, k = pl.program_id(0), pl.program_id(1)
+    a = g1_ref[i1_ref[b, k], :].astype(jnp.float32).reshape(d1, rank)
+    m = g2_row_ref[0, :].astype(jnp.float32).reshape(rank, d2 * rank)
+    # T[d1_i, d2_i*r + r2] = sum_r1 A[d1_i, r1] * G2[r1, d2_i*r + r2]
+    t = jnp.dot(a, m, preferred_element_type=jnp.float32).reshape(d1 * d2, rank)
+    c = g3_ref[i3_ref[b, k], :].astype(jnp.float32).reshape(rank, d3)
+    row = jnp.dot(t, c, preferred_element_type=jnp.float32).reshape(1, d1 * d2 * d3)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + row
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "interpret"))
+def tt_bag(
+    g1: jax.Array,
+    g2: jax.Array,
+    g3: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    i3: jax.Array,
+    *,
+    dims: tuple[int, int, int, int],
+    interpret: bool = False,
+) -> jax.Array:
+    """Pooled TT bag: out[b] = Σ_k G1[i1[b,k]] · G2[i2[b,k]] · G3[i3[b,k]].
+
+    g1: (v1, d1*r); g2: (v2, r*d2*r); g3: (v3, r*d3) — same dtype;
+    i1/i2/i3: (B, K) int32.  ``dims`` = (d1, d2, d3, rank), static.
+    Returns (B, d1*d2*d3) in the table dtype (fp32 accumulation inside).
+    """
+    d1, d2, d3, rank = dims
+    bsz, k_steps = i1.shape
+    dim = d1 * d2 * d3
+    assert g1.shape[1] == d1 * rank, (g1.shape, dims)
+    assert g2.shape[1] == rank * d2 * rank, (g2.shape, dims)
+    assert g3.shape[1] == rank * d3, (g3.shape, dims)
+
+    grid = (bsz, k_steps)
+    kernel = pl.pallas_call(
+        functools.partial(_kernel, d1=d1, d2=d2, d3=d3, rank=rank),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,  # i1, i2, i3 ride in SMEM ahead of the DMAs
+            grid=grid,
+            in_specs=[
+                # One middle-core row per step, DMA'd from HBM by prefetched i2.
+                pl.BlockSpec((1, g2.shape[1]), lambda b, k, i1, i2, i3: (i2[b, k], 0)),
+                # Outer cores: same block every step -> stay resident in VMEM.
+                pl.BlockSpec(g1.shape, lambda b, k, i1, i2, i3: (0, 0)),
+                pl.BlockSpec(g3.shape, lambda b, k, i1, i2, i3: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dim), lambda b, k, i1, i2, i3: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )
+    out = kernel(
+        i1.astype(jnp.int32), i2.astype(jnp.int32), i3.astype(jnp.int32), g2, g1, g3
+    )
+    return out.astype(g2.dtype)

@@ -11,18 +11,18 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.distributed import jax_compat
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (tests, degraded/elastic shapes)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    from repro.distributed import jax_compat
+
+    return jax_compat.make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants used by the roofline analysis.

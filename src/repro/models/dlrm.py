@@ -23,7 +23,7 @@ from repro.core import embedding_bag, qr_embedding
 from repro.core.embedding_bag import BagConfig
 from repro.core.overlap import parallel_branches
 from repro.core.qr_embedding import EmbeddingConfig
-from repro.distributed import sharding
+from repro.distributed import jax_compat, sharding
 from repro.models.layers import _normal
 
 
@@ -35,6 +35,9 @@ def make_bags(cfg: DLRMConfig) -> list[BagConfig]:
         collision=cfg.qr_collision,
         param_dtype=cfg.pdtype,
         compute_dtype=cfg.cdtype,
+        tt_rank=cfg.tt_rank,
+        tt_vocab_factors=cfg.tt_vocab_factors,
+        tt_dim_factors=cfg.tt_dim_factors,
     )
     return [BagConfig(emb=emb, pooling=cfg.pooling) for _ in range(cfg.num_tables)]
 
@@ -114,6 +117,10 @@ def _gnr(tables, idx, bags, cfg: DLRMConfig):
             p = tabs[t]
             if bag.emb.kind == "qr":
                 part = SE.qr_bag_partial(p["q"], p["r"], indices[:, t], plan, axis=row_axis)
+            elif bag.emb.kind == "tt":
+                part = SE.tt_bag_partial(
+                    p["g1"], p["g2"], p["g3"], indices[:, t], plan, axis=row_axis
+                )
             else:
                 part = SE.dense_bag_partial(p["table"], indices[:, t], plan, axis=row_axis)
             outs.append(part)
@@ -122,9 +129,11 @@ def _gnr(tables, idx, bags, cfg: DLRMConfig):
     def tspec(bag):
         if bag.emb.kind == "qr":
             return {"q": P(row_axis, None), "r": P()}
+        if bag.emb.kind == "tt":
+            return {"g1": P(), "g2": P(row_axis, None), "g3": P()}
         return {"table": P(row_axis, None)}
 
-    return jax.shard_map(
+    return jax_compat.shard_map(
         local_fn,
         mesh=mesh,
         in_specs=([tspec(b) for b in bags], P(batch_spec, None, None)),
@@ -142,6 +151,10 @@ def pad_tables_for_mesh(params, cfg: DLRMConfig, num_shards: int):
     for t, bag in zip(params["tables"], bags):
         if "q" in t:
             out.append({"q": SE.pad_q_table(t["q"], bag.emb), "r": t["r"]})
+        elif "g2" in t:
+            out.append(
+                {"g1": t["g1"], "g2": SE.pad_q_table(t["g2"], bag.emb), "g3": t["g3"]}
+            )
         else:
             out.append({"table": SE.pad_q_table(t["table"], bag.emb)})
     return {**params, "tables": out}

@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the package is
+absent instead of breaking collection of the whole suite.
+
+Usage in test modules:  ``from hyp_compat import given, settings, st``
+With hypothesis installed this is a pure re-export; without it, ``@given``
+replaces the test with a zero-arg skipped stub (so strategy kwargs never reach
+pytest's fixture resolution) and ``st``/``settings`` are inert placeholders.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call at collection time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

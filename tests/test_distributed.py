@@ -127,14 +127,15 @@ def test_compressed_psum_close_to_exact(mesh_runner):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import compressed_psum, ef_step
+from repro.distributed.jax_compat import shard_map
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh((4,), ("d",))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 128))
 
-exact = jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+exact = shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
     in_specs=P("d"), out_specs=P("d"), check_vma=False)(x)
-approx = jax.shard_map(lambda v: compressed_psum(v, "d"), mesh=mesh,
+approx = shard_map(lambda v: compressed_psum(v, "d"), mesh=mesh,
     in_specs=P("d"), out_specs=P("d"), check_vma=False)(x)
 err = float(jnp.abs(exact - approx).max() / (jnp.abs(exact).max() + 1e-9))
 assert err < 0.05, err
@@ -145,7 +146,7 @@ def two_steps(v):
     g1, r = ef_step(v, r, "d")
     g2, r = ef_step(v, r, "d")
     return g1 + g2
-efsum = jax.shard_map(two_steps, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
+efsum = shard_map(two_steps, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
     check_vma=False)(x)
 err_ef = float(jnp.abs(2*exact - efsum).max() / (jnp.abs(exact).max() + 1e-9))
 assert err_ef < 0.08, err_ef

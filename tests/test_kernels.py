@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -64,7 +64,9 @@ def test_gnr_dense_sweep(dim):
     key = jax.random.PRNGKey(4)
     idx = jax.random.randint(key, (5, 9), 0, 64)
     out = ops.gnr_pooled_dense(t, idx)
-    np.testing.assert_allclose(out, ref.dense_bag_ref(t, idx), rtol=1e-5)
+    # atol covers fp32 accumulation-order differences between the interpret-
+    # mode kernel and the XLA-fused reference (host-dependent).
+    np.testing.assert_allclose(out, ref.dense_bag_ref(t, idx), rtol=1e-5, atol=1e-5)
 
 
 def test_small_dim_fallback():

@@ -85,3 +85,22 @@ def test_abstract_params_match_real_init_structure(arch):
     mesh = make_mesh((1,), ("model",))
     sh = SH.shardings_for_tree(mesh, params, axes, SH.PARAM_RULES)
     assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(params))
+
+
+def test_dlrm_registry_resolves_all_names():
+    """Every registered DLRM id resolves to a config whose embedding kind
+    matches the name (the selection surface used by scripts/dlrm_dryrun.py)."""
+    from repro.configs import registry as R
+
+    for name in R.DLRM_CONFIGS:
+        cfg = R.get_dlrm(name)
+        if "-tt" in name:
+            assert cfg.embedding_kind == "tt"
+        elif "-qr" in name:
+            assert cfg.embedding_kind == "qr"
+        elif "-dense" in name:
+            assert cfg.embedding_kind == "dense"
+    import pytest
+
+    with pytest.raises(KeyError):
+        R.get_dlrm("dlrm-nope")

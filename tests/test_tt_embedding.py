@@ -1,0 +1,253 @@
+"""TT-Rec embedding subsystem: factorization, lookup oracles, placement,
+gradient flow, and DLRM-with-TT end-to-end (single-device and sharded)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import placement, qr_embedding as QE, tt_embedding as TT
+from repro.core.qr_embedding import EmbeddingConfig
+
+
+def _cfg(**kw):
+    base = dict(
+        vocab=4096, dim=32, kind="tt", tt_rank=4,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+    base.update(kw)
+    return EmbeddingConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# factorization / spec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim", [8, 16, 32, 64, 128, 512])
+def test_dim_factors_exact(dim):
+    d1, d2, d3 = TT.dim_factors3(dim)
+    assert d1 * d2 * d3 == dim
+    assert d2 == max(d1, d2, d3)       # bulk in the middle core
+
+
+@pytest.mark.parametrize("vocab", [100, 4096, 50_000, 2_000_000])
+def test_vocab_factors_cover(vocab):
+    v1, v2, v3 = TT.vocab_factors3(vocab)
+    assert v1 * v2 * v3 >= vocab
+    # asymmetric: outer factors are SRAM-sized, the bulk is the middle core
+    assert v1 == v3 and v1 ** 4 <= 16 * vocab
+    assert v2 >= v1
+
+
+def test_decompose_roundtrip():
+    cfg = _cfg()
+    spec = cfg.tt_spec
+    idx = jnp.arange(cfg.vocab, dtype=jnp.int32)
+    i1, i2, i3 = TT.tt_decompose(idx, spec)
+    recon = (np.asarray(i1) * spec.v2 + np.asarray(i2)) * spec.v3 + np.asarray(i3)
+    np.testing.assert_array_equal(recon, np.asarray(idx))
+    assert int(i1.max()) < spec.v1
+    assert int(i2.max()) < spec.v2
+    assert int(i3.max()) < spec.v3
+
+
+def test_bad_factors_rejected():
+    with pytest.raises(ValueError):
+        _cfg(tt_vocab_factors=(2, 2, 2)).tt_spec       # covers 8 < 4096
+    with pytest.raises(ValueError):
+        _cfg(tt_dim_factors=(2, 2, 2)).tt_spec         # 8 != 32
+
+
+# ---------------------------------------------------------------------------
+# lookup / materialize
+# ---------------------------------------------------------------------------
+
+def test_lookup_shape_and_dtype():
+    cfg = _cfg()
+    params = QE.init(jax.random.PRNGKey(0), cfg)
+    idx = jnp.array([[0, 1], [4095, 500]], jnp.int32)
+    out = QE.lookup(params, idx, cfg)
+    assert out.shape == (2, 2, 32)
+    assert out.dtype == jnp.float32
+
+
+def test_lookup_matches_manual_contraction():
+    """TT lookup == dense reconstruction by explicit per-index einsum."""
+    cfg = _cfg()
+    spec = cfg.tt_spec
+    params = QE.init(jax.random.PRNGKey(1), cfg)
+    idx = jnp.array([3, 17, 999, 4095], jnp.int32)
+    i1, i2, i3 = TT.tt_decompose(idx, spec)
+    a = params["g1"][i1].reshape(-1, spec.d1, spec.rank)
+    b = params["g2"][i2].reshape(-1, spec.rank, spec.d2, spec.rank)
+    c = params["g3"][i3].reshape(-1, spec.rank, spec.d3)
+    expect = jnp.einsum("nap,npbq,nqc->nabc", a, b, c).reshape(-1, cfg.dim)
+    np.testing.assert_allclose(
+        np.asarray(QE.lookup(params, idx, cfg)), np.asarray(expect), rtol=1e-6
+    )
+
+
+def test_materialize_matches_lookup():
+    cfg = _cfg(vocab=1000)                 # padded_vocab > vocab: pad never read
+    params = QE.init(jax.random.PRNGKey(2), cfg)
+    table = QE.materialize(params, cfg)
+    assert table.shape == (1000, 32)
+    idx = jnp.array([5, 99, 731], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(table[idx]), np.asarray(QE.lookup(params, idx, cfg)), rtol=1e-6
+    )
+
+
+def test_distinct_rows():
+    """Mixed-radix factorization is complementary: rows are distinct (a.s.)."""
+    cfg = _cfg()
+    params = QE.init(jax.random.PRNGKey(3), cfg)
+    out = np.asarray(QE.lookup(params, jnp.arange(64, dtype=jnp.int32), cfg))
+    assert len(np.unique(out.round(5), axis=0)) == 64
+
+
+def test_param_count_and_compression():
+    cfg = _cfg(vocab=2_000_000, dim=128, tt_rank=16)
+    params = QE.init(jax.random.PRNGKey(4), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    assert n == cfg.param_count()
+    assert cfg.tt_spec.compression > 50      # way past QR's collision=64 point
+    # outer cores stay SRAM-sized (the pin must be legal)
+    assert cfg.tt_spec.sram_bytes() < 64 * 1024
+
+
+def test_param_axes_tiering():
+    """Middle core rides the bank-group axis; outer cores the SRAM tier."""
+    axes = QE.param_axes(_cfg())
+    assert axes["g2"] == ("qrow", "embed")
+    assert axes["g1"] == ("rrow", "embed") and axes["g3"] == ("rrow", "embed")
+
+
+def test_logits_head_matches_materialized():
+    cfg = _cfg(vocab=257)
+    params = QE.init(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 32))
+    fast = QE.logits_head(params, x, cfg)
+    slow = x @ QE.materialize(params, cfg).T
+    assert fast.shape == (4, 257)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradients
+# ---------------------------------------------------------------------------
+
+def test_gradient_flows_through_all_cores():
+    cfg = _cfg()
+    params = QE.init(jax.random.PRNGKey(7), cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(8), (32,), 0, cfg.vocab)
+
+    def loss(p):
+        return (QE.lookup(p, idx, cfg) ** 2).sum()
+
+    grads = jax.grad(loss)(params)
+    for k in ("g1", "g2", "g3"):
+        g = np.asarray(grads[k])
+        assert np.isfinite(g).all()
+        assert np.abs(g).max() > 0, f"no gradient reached {k}"
+    # rows never looked up get zero gradient (sparse update semantics)
+    spec = cfg.tt_spec
+    _, i2, _ = TT.tt_decompose(idx, spec)
+    untouched = np.setdiff1d(np.arange(spec.v2), np.asarray(i2))
+    assert np.abs(np.asarray(grads["g2"])[untouched]).max() == 0
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def test_plan_tt_tiers():
+    from repro.data.synthetic import zipf_trace
+
+    cfg = _cfg()
+    spec = cfg.tt_spec
+    counts = placement.profile_counts(zipf_trace(cfg.vocab, 20_000, seed=3), cfg.vocab)
+    plan = placement.plan_tt_tiers(counts, spec, request_share=0.8)
+    assert plan.mid_plan.expected_hot_hit >= 0.8 - 1e-9
+    assert 0 < plan.num_hot <= spec.v2
+    assert plan.sram_fits                   # outer cores must fit the budget
+    assert plan.sram_bytes == spec.sram_bytes()
+    # folding conserves requests
+    folded = placement.fold_counts_tt(counts, spec)
+    assert folded.sum() == counts.sum()
+    assert folded.size == spec.v2
+
+
+# ---------------------------------------------------------------------------
+# DLRM with TT tables, end to end
+# ---------------------------------------------------------------------------
+
+def test_dlrm_tt_smoke_trains():
+    from repro.configs import dlrm_tt
+    from repro.data.synthetic import dlrm_batch
+    from repro.models import dlrm
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_step import make_dlrm_loss, make_train_step
+
+    cfg = dlrm_tt.SMOKE
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+    batch = dlrm_batch(cfg, 16, seed=0, step=0)
+    logits = dlrm.forward_dlrm(params, batch["dense"], batch["idx"], cfg)
+    assert logits.shape == (16,)
+    assert not bool(jnp.isnan(logits).any())
+
+    step = jax.jit(make_train_step(make_dlrm_loss(cfg), opt_mod.OptConfig()))
+    opt = opt_mod.init(params)
+    p2, opt, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    for k in ("g1", "g2", "g3"):            # the update reached every core
+        delta = float(jnp.abs(p2["tables"][0][k] - params["tables"][0][k]).max())
+        assert delta > 0
+
+
+def test_dlrm_tt_vs_dense_same_structure():
+    from repro.configs import dlrm_tt
+    from repro.data.synthetic import dlrm_batch
+    from repro.models import dlrm
+
+    cfg_tt = dlrm_tt.SMOKE
+    cfg_dense = dataclasses.replace(cfg_tt, embedding_kind="dense")
+    pt, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg_tt)
+    pd, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg_dense)
+    nt = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(pt["tables"]))
+    nd = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(pd["tables"]))
+    assert nt * 4 < nd                      # real compression at smoke scale
+    batch = dlrm_batch(cfg_tt, 8, seed=0, step=0)
+    for p, c in ((pt, cfg_tt), (pd, cfg_dense)):
+        out = dlrm.forward_dlrm(p, batch["dense"], batch["idx"], c)
+        assert out.shape == (8,)
+
+
+def test_sharded_dlrm_tt_matches_single(mesh_runner):
+    mesh_runner(
+        """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import dlrm_tt
+from repro.data.synthetic import dlrm_batch
+from repro.models import dlrm
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_mesh
+
+cfg = dataclasses.replace(dlrm_tt.SMOKE, compute_dtype="float32")
+params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+batch = dlrm_batch(cfg, 8, seed=0, step=0)
+single = dlrm.forward_dlrm(params, batch["dense"], batch["idx"], cfg)
+
+mesh = make_mesh((2, 4), ("data", "model"))
+params_p = dlrm.pad_tables_for_mesh(params, cfg, 4)
+with SH.use_rules(mesh, SH.DEFAULT_RULES):
+    sharded = jax.jit(lambda p, d, i: dlrm.forward_dlrm(p, d, i, cfg))(
+        params_p, batch["dense"], batch["idx"])
+np.testing.assert_allclose(np.asarray(single), np.asarray(sharded), rtol=2e-3, atol=2e-3)
+print("OK")
+""",
+        n_devices=8,
+    )

@@ -1,0 +1,126 @@
+"""Fused Pallas TT gather-contract kernel vs the pure-jnp oracle
+(interpret=True on CPU), plus integration with the tt_embedding module."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qr_embedding as QE, tt_embedding as TT
+from repro.core.qr_embedding import EmbeddingConfig
+from repro.kernels import ops, ref
+
+
+def _cores(v1, v2, v3, dims, dtype, seed=0):
+    d1, d2, d3, r = dims
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g1 = jax.random.normal(k1, (v1, d1 * r), dtype)
+    g2 = jax.random.normal(k2, (v2, r * d2 * r), dtype)
+    g3 = jax.random.normal(k3, (v3, r * d3), dtype)
+    return g1, g2, g3
+
+
+def _indices(key, shape, v1, v2, v3):
+    return (
+        jax.random.randint(jax.random.fold_in(key, 1), shape, 0, v1),
+        jax.random.randint(jax.random.fold_in(key, 2), shape, 0, v2),
+        jax.random.randint(jax.random.fold_in(key, 3), shape, 0, v3),
+    )
+
+
+@pytest.mark.parametrize("dims", [(4, 8, 4, 4), (4, 8, 4, 16), (2, 4, 2, 8), (4, 4, 2, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tt_bag_sweep(dims, dtype):
+    v1, v2, v3 = 8, 64, 8
+    g1, g2, g3 = _cores(v1, v2, v3, dims, dtype)
+    i1, i2, i3 = _indices(jax.random.PRNGKey(1), (6, 5), v1, v2, v3)
+    out = ops.tt_pooled(g1, g2, g3, i1, i2, i3, dims=dims)
+    expect = ref.tt_bag_ref(g1, g2, g3, i1, i2, i3, dims=dims)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=1e-5 if dtype == jnp.float32 else 3e-2, atol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("k", [1, 4, 32])
+def test_tt_bag_pooling_sizes(k):
+    dims = (4, 8, 4, 8)
+    g1, g2, g3 = _cores(16, 128, 16, dims, jnp.float32)
+    i1, i2, i3 = _indices(jax.random.PRNGKey(2), (5, k), 16, 128, 16)
+    out = ops.tt_pooled(g1, g2, g3, i1, i2, i3, dims=dims)
+    expect = ref.tt_bag_ref(g1, g2, g3, i1, i2, i3, dims=dims)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("lead", [(7,), (2, 5), (3, 2, 2)])
+def test_tt_lookup_leading_shapes(lead):
+    dims = (4, 4, 2, 4)
+    g1, g2, g3 = _cores(8, 32, 8, dims, jnp.float32)
+    i1, i2, i3 = _indices(jax.random.PRNGKey(3), lead, 8, 32, 8)
+    out = ops.tt_lookup(g1, g2, g3, i1, i2, i3, dims=dims)
+    assert out.shape == lead + (32,)
+    expect = ref.tt_row_ref(g1, g2, g3, i1, i2, i3, dims=dims)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_tt_small_dim_fallback():
+    """dims with no 8-aligned output tile fall back to the jnp reference."""
+    dims = (2, 3, 2, 2)                     # dim 12: not 8-aligned
+    g1, g2, g3 = _cores(4, 8, 4, dims, jnp.float32)
+    i1, i2, i3 = _indices(jax.random.PRNGKey(4), (3, 2), 4, 8, 4)
+    out = ops.tt_pooled(g1, g2, g3, i1, i2, i3, dims=dims)
+    expect = ref.tt_bag_ref(g1, g2, g3, i1, i2, i3, dims=dims)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+
+def test_tt_bag_accumulates_fp32():
+    """bf16 cores with many repeated adds must not lose precision (the fp32
+    VMEM accumulator — 'MAC-unit accuracy')."""
+    dims = (1, 1, 1, 1)
+    k = 256
+    g1 = jnp.full((2, 1), 1.0, jnp.bfloat16)
+    g2 = jnp.full((2, 1), jnp.bfloat16(1.001), jnp.bfloat16)
+    g3 = jnp.full((2, 1), 1.0, jnp.bfloat16)
+    zeros = jnp.zeros((1, k), jnp.int32)
+    out = ops.tt_pooled(g1, g2, g3, zeros, zeros, zeros, dims=dims)
+    expect = float(jnp.bfloat16(1.001)) * k
+    assert abs(float(out[0, 0]) - expect) / expect < 1e-2
+
+
+def test_tt_kernel_matches_module_lookup():
+    """The fused kernel reproduces tt_embedding.lookup numerics end to end:
+    kind='tt' serving can swap the jnp path for the kernel transparently."""
+    cfg = EmbeddingConfig(
+        vocab=4096, dim=32, kind="tt", tt_rank=4,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+    spec = cfg.tt_spec
+    params = QE.init(jax.random.PRNGKey(5), cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(6), (17,), 0, cfg.vocab)
+    i1, i2, i3 = TT.tt_decompose(idx, spec)
+    out = ops.tt_lookup(
+        params["g1"], params["g2"], params["g3"], i1, i2, i3,
+        dims=(spec.d1, spec.d2, spec.d3, spec.rank),
+    )
+    expect = QE.lookup(params, idx, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_tt_bag_matches_pooled_module_bag():
+    """Kernel bag == module-level pooled bag (the DLRM GnR contract)."""
+    from repro.core.embedding_bag import BagConfig, bag_lookup
+
+    cfg = EmbeddingConfig(
+        vocab=4096, dim=32, kind="tt", tt_rank=4,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+    spec = cfg.tt_spec
+    params = QE.init(jax.random.PRNGKey(7), cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(8), (9, 8), 0, cfg.vocab)
+    i1, i2, i3 = TT.tt_decompose(idx, spec)
+    out = ops.tt_pooled(
+        params["g1"], params["g2"], params["g3"], i1, i2, i3,
+        dims=(spec.d1, spec.d2, spec.d3, spec.rank),
+    )
+    expect = bag_lookup(params, idx, BagConfig(emb=cfg, pooling=8))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-5)
