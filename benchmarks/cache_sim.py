@@ -1,0 +1,147 @@
+"""ProactivePIM cache-subsystem sweep: cache size vs hit rate vs traffic.
+
+Simulates the double-buffered next-batch prefetch scheduler
+(``repro.cache.sram_cache``) over Zipf(1.05) synthetic request batches — the
+paper's long-tail access model — and reports, per cache size:
+
+* steady-state hit rate of the staged cache (paper's SRAM-cache efficacy);
+* staged rows per batch (the prefetch DMA the double buffer must hide);
+* modeled DRAM bytes: uncached baseline vs misses+staging (the traffic win);
+
+plus the intra-GnR locality of the shared subtables (why the prefetch works
+at all) and the duplication planner's communication kill at two budgets.
+
+Default point: QR, 2^18 vocab, c=64, 1024 slots — a 512 KB cache at the
+paper's 128-dim fp32 rows, the bg-PIM SRAM size class.  Hit rate there is
+the tracked acceptance number (>= 0.8).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cache import duplication, intra_gnr
+from repro.cache.sram_cache import simulate
+from repro.core import placement
+from repro.core.embedding_bag import BagConfig
+from repro.core.qr_embedding import EmbeddingConfig
+from repro.data.synthetic import zipf_trace
+
+ALPHA = 1.05
+
+
+def _batches(vocab: int, batches: int, batch: int, pooling: int, seed: int = 3):
+    n = batches * batch * pooling
+    return zipf_trace(vocab, n, alpha=ALPHA, seed=seed).reshape(
+        batches, batch * pooling
+    )
+
+
+def qr_cache_sweep(
+    *, vocab=262_144, collision=64, pooling=32, batch=256, n_batches=24,
+    dim=128, slot_sweep=(256, 512, 1024, 2048), default_slots=1024,
+) -> float:
+    """Hit rate / staged rows / traffic vs cache size on the Q-row stream.
+
+    Returns the default-size hit rate (the acceptance number).
+    """
+    cfg = EmbeddingConfig(vocab=vocab, dim=dim, kind="qr", collision=collision)
+    trace = _batches(vocab, n_batches, batch, pooling)
+    q, q_rows, row_bytes = intra_gnr.subtable_traces(trace, cfg)["q"]
+    default_hit = 0.0
+    for slots in slot_sweep:
+        stats = simulate([q[t] for t in range(n_batches)], q_rows, slots)
+        tr = stats.traffic_bytes(row_bytes)
+        tag = " (default)" if slots == default_slots else ""
+        emit(
+            f"cache_sim/qr_slots{slots}", 0.0,
+            f"hit={stats.hit_rate:.3f} staged/batch={stats.staged_per_batch:.0f} "
+            f"dram={tr['cached']}B vs baseline={tr['baseline']}B "
+            f"({tr['cached'] / tr['baseline']:.2f}x){tag}",
+        )
+        if slots == default_slots:
+            default_hit = stats.hit_rate
+    return default_hit
+
+
+def tt_cache_sweep(
+    *, vocab=262_144, dim=128, rank=16, pooling=32, batch=256, n_batches=24,
+    slot_sweep=(64, 128, 256, 512),
+) -> None:
+    """Same sweep on the TT middle-core (i2) stream."""
+    cfg = EmbeddingConfig(vocab=vocab, dim=dim, kind="tt", tt_rank=rank)
+    spec = cfg.tt_spec
+    trace = _batches(vocab, n_batches, batch, pooling)
+    i2, _v2, row_bytes = intra_gnr.subtable_traces(trace, cfg)["g2"]
+    for slots in slot_sweep:
+        stats = simulate([i2[t] for t in range(n_batches)], spec.v2, slots)
+        tr = stats.traffic_bytes(row_bytes)
+        emit(
+            f"cache_sim/tt_slots{slots}", 0.0,
+            f"hit={stats.hit_rate:.3f} staged/batch={stats.staged_per_batch:.0f} "
+            f"dram={tr['cached']}B vs baseline={tr['baseline']}B "
+            f"({tr['cached'] / tr['baseline']:.2f}x) v2={spec.v2}",
+        )
+
+
+def locality_report(*, vocab=262_144, collision=64, pooling=32, n=40_000) -> None:
+    """Intra-GnR reuse of every subtable — the prefetch-value ranking input."""
+    trace = zipf_trace(vocab, n - n % pooling, alpha=ALPHA, seed=5).reshape(
+        -1, pooling
+    )
+    for kind, kw in (
+        ("qr", {"collision": collision}),
+        ("tt", {"tt_rank": 16}),
+    ):
+        cfg = EmbeddingConfig(vocab=vocab, dim=128, kind=kind, **kw)
+        locs = intra_gnr.analyze_table(trace, cfg)
+        parts = " ".join(
+            f"{name}={loc.mean_intra_reuse:.2f}(touched={loc.touched_rows})"
+            for name, loc in locs.items()
+        )
+        emit(f"cache_sim/intra_gnr_{kind}", 0.0, f"reuse/bag: {parts}")
+
+
+def duplication_report(
+    *, vocab=262_144, collision=64, pooling=32, num_tables=8, batch=1024,
+    shards=8, n=60_000,
+) -> None:
+    """Planner outcome at a generous and a starved budget."""
+    trace = zipf_trace(vocab, n, alpha=ALPHA, seed=9)
+    counts = placement.profile_counts(trace, vocab)
+    for kind, kw in (("qr", {"collision": collision}), ("tt", {"tt_rank": 16})):
+        emb = EmbeddingConfig(vocab=vocab, dim=128, kind=kind, **kw)
+        bags = [BagConfig(emb=emb, pooling=pooling) for _ in range(num_tables)]
+        for budget in (64 * 2**20, 256 * 2**10):
+            plan = duplication.plan_duplication(
+                bags, [counts] * num_tables,
+                num_shards=shards, budget_bytes=budget,
+            )
+            ici = plan.ici_bytes_per_batch(batch, emb.dim)
+            emit(
+                f"cache_sim/dup_{kind}_budget{budget // 1024}K", 0.0,
+                f"replicated={plan.replicated_bytes}B comm_free={plan.comm_free} "
+                f"local_share={plan.tables[0].local_share:.2f} "
+                f"ici_saved/batch={ici['saved']:.0f}B of {ici['baseline']:.0f}B",
+            )
+
+
+def run(tiny: bool = False) -> None:
+    if tiny:
+        # CI smoke: same code paths, seconds not minutes
+        hit = qr_cache_sweep(
+            vocab=16_384, collision=16, pooling=8, batch=64, n_batches=6,
+            slot_sweep=(64, 128), default_slots=128,
+        )
+        tt_cache_sweep(
+            vocab=16_384, pooling=8, batch=64, n_batches=6, slot_sweep=(32, 64)
+        )
+        locality_report(vocab=16_384, collision=16, pooling=8, n=4_000)
+        duplication_report(vocab=16_384, collision=16, num_tables=2, n=6_000)
+    else:
+        hit = qr_cache_sweep()
+        tt_cache_sweep()
+        locality_report()
+        duplication_report()
+    emit("cache_sim/default_hit_rate", 0.0, f"hit={hit:.3f} target>=0.8")

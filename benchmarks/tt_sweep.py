@@ -92,7 +92,13 @@ def measured_kernel(vocab=65536, dim=128, rank=8, batch=256, pooling=16) -> None
     )
 
 
-def run() -> None:
+def run(tiny: bool = False) -> None:
+    if tiny:
+        # CI smoke: same code paths at toy sizes
+        rank_sweep(vocab=4096, dim=32, pooling=4)
+        factorization_sweep(vocab=4096, dim=32, rank=4)
+        measured_kernel(vocab=4096, dim=32, rank=4, batch=8, pooling=4)
+        return
     rank_sweep()
     factorization_sweep()
     measured_kernel()

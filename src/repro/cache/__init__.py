@@ -1,0 +1,40 @@
+"""ProactivePIM cache subsystem — the paper's two headline mechanisms.
+
+The paper accelerates weight-sharing embedding layers with two levers:
+
+1. **intra-GnR prefetching** — within one gather-and-reduce, the shared
+   subtables (QR's R table, TT's outer cores) are touched once per bag
+   element, so their reuse is ~pooling-fold; ProactivePIM prefetches them
+   into a bg-PIM SRAM cache *before* the GnR arrives, double-buffered so
+   batch ``t+1``'s rows stage while batch ``t`` executes;
+2. **subtable duplication** — replicating the small shared subtables (and
+   the hottest big-table rows) across bank groups removes the CPU–PIM
+   transfer entirely: every partial sum completes where the data lives.
+
+TPU analogue implemented here:
+
+* ``intra_gnr``    — trace-driven locality analyzer: measures per-GnR reuse
+  per subtable row and ranks rows by prefetch value;
+* ``sram_cache``   — software-managed cache model (slot map + double-buffered
+  next-batch prefetch scheduler) that drives the
+  ``repro.kernels.cached_gather`` Pallas kernel: scalar-prefetched slot maps
+  route hits to a VMEM-resident cache block, misses to streamed HBM rows;
+* ``duplication``  — planner deciding which subtables are replicated per
+  shard vs row-sharded; when the duplicated footprint fits the per-chip
+  budget the cross-shard combine (the ICI analogue of the paper's CPU–PIM
+  communication) is eliminated outright.
+
+Flow: trace -> ``intra_gnr.analyze_table`` -> ``duplication.plan_duplication``
+-> ``sram_cache.PrefetchScheduler`` -> cached kernels / serving pipeline
+(``repro.launch.serve_rec``).
+"""
+
+from repro.cache.duplication import (             # noqa: F401
+    DuplicationPlan, SubtableDecision, TableDupPlan, plan_duplication,
+)
+from repro.cache.intra_gnr import (               # noqa: F401
+    GnRLocality, analyze_bags, analyze_table, rank_prefetch, subtable_traces,
+)
+from repro.cache.sram_cache import (              # noqa: F401
+    CacheStats, PrefetchScheduler,
+)

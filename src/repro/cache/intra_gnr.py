@@ -1,0 +1,145 @@
+"""Intra-GnR locality analysis (paper Fig. 7 / §IV-A analogue).
+
+One gather-and-reduce pools ``pooling`` rows per bag.  Weight-sharing makes
+several of those rows land in *small shared subtables*: every QR lookup in a
+bag touches the R table (``idx % c`` over only ``c`` rows) and every TT lookup
+touches the outer cores G1/G3 (``~vocab**0.25`` rows).  The result is heavy
+reuse *within a single GnR* — the paper's intra-GnR locality — which a cache
+filled *before* the GnR arrives converts into SRAM hits.
+
+This module measures that reuse from a trace, per subtable row:
+
+* ``touches[row]``  — total accesses to the row;
+* ``bags[row]``     — number of distinct bags that touch it.
+
+``touches / bags`` is the mean intra-GnR reuse: how many DRAM fetches one
+staged copy of the row replaces inside each bag that uses it.  Rows are
+ranked for prefetch by the accesses a single staging DMA saves
+(``touches - bags`` for a per-bag cache, ``touches - 1`` for a per-batch
+cache — the ordering is the same, by ``touches`` with ``bags`` as tiebreak).
+
+All host-side numpy: the paper profiles traces offline, between training and
+inference deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class GnRLocality:
+    """Per-row intra-GnR reuse statistics for one subtable."""
+
+    rows: int                   # subtable row count
+    touches: np.ndarray         # (rows,) int64: total accesses
+    bags: np.ndarray            # (rows,) int64: distinct bags touching the row
+    num_bags: int               # bags in the analyzed trace
+    row_bytes: int = 0          # bytes per row (0 = unknown)
+
+    @property
+    def intra_reuse(self) -> np.ndarray:
+        """Mean touches per touching bag, per row (1.0 = no intra-GnR reuse)."""
+        return self.touches / np.maximum(self.bags, 1)
+
+    @property
+    def mean_intra_reuse(self) -> float:
+        """Access-weighted intra-GnR reuse of the whole subtable."""
+        total_bags = max(1, int(self.bags.sum()))
+        return float(self.touches.sum() / total_bags)
+
+    @property
+    def touched_rows(self) -> int:
+        return int(np.count_nonzero(self.touches))
+
+    def prefetch_value(self) -> np.ndarray:
+        """(rows,) accesses saved if the row is staged once per batch.
+
+        One staging DMA replaces every subsequent DRAM touch, so the saving
+        is ``touches - 1`` for touched rows (0 for untouched ones).
+        """
+        return np.maximum(self.touches - 1, 0) * (self.touches > 0)
+
+
+def analyze_bags(trace: np.ndarray, rows: int, *, row_bytes: int = 0) -> GnRLocality:
+    """Measure per-row intra-GnR reuse from a bag trace.
+
+    ``trace``: (num_bags, pooling) subtable-row indices — one row per GnR.
+    """
+    trace = np.asarray(trace)
+    if trace.ndim != 2:
+        raise ValueError(f"trace must be (num_bags, pooling), got {trace.shape}")
+    num_bags = trace.shape[0]
+    touches = np.bincount(trace.reshape(-1), minlength=rows)
+    # distinct (bag, row) pairs -> per-row bag counts
+    if trace.size:
+        bag_ids = np.repeat(np.arange(num_bags, dtype=np.int64), trace.shape[1])
+        key = bag_ids * rows + trace.reshape(-1).astype(np.int64)
+        uniq_rows = (np.unique(key) % rows).astype(np.int64)
+        bags = np.bincount(uniq_rows, minlength=rows)
+    else:
+        bags = np.zeros(rows, dtype=np.int64)
+    return GnRLocality(
+        rows=rows,
+        touches=touches.astype(np.int64),
+        bags=bags.astype(np.int64),
+        num_bags=num_bags,
+        row_bytes=row_bytes,
+    )
+
+
+def subtable_traces(idx: np.ndarray, cfg, *, bytes_per_elem: int = 4) -> dict:
+    """Decompose a logical bag trace into per-subtable traces.
+
+    ``idx``: (num_bags, pooling) logical row ids; ``cfg``: EmbeddingConfig.
+    Returns ``{name: (trace, rows, row_bytes)}`` for every subtable the kind
+    touches — the access streams whose locality the cache exploits.
+    """
+    idx = np.asarray(idx)
+    if cfg.kind == "qr":
+        # single-sourced index math: the same decomposition the lookup uses
+        q, r = (np.asarray(a) for a in hashing.qr_decompose(idx, cfg.collision))
+        spec = cfg.qr_spec
+        rb = cfg.dim * bytes_per_elem
+        return {"q": (q, spec.q_rows, rb), "r": (r, spec.r_rows, rb)}
+    if cfg.kind == "tt":
+        from repro.core import tt_embedding
+
+        spec = cfg.tt_spec
+        i1, i2, i3 = (np.asarray(a) for a in tt_embedding.tt_decompose(idx, spec))
+        return {
+            "g1": (i1, spec.v1, spec.g1_width * bytes_per_elem),
+            "g2": (i2, spec.v2, spec.g2_width * bytes_per_elem),
+            "g3": (i3, spec.v3, spec.g3_width * bytes_per_elem),
+        }
+    if cfg.kind == "hashed":
+        rows = cfg.physical_hashed_rows
+        hs = np.asarray(hashing.k_ary_hash(idx, rows, cfg.hashed_k))
+        return {"table": (hs.reshape(idx.shape[0], -1), rows, cfg.dim * bytes_per_elem)}
+    return {"table": (idx, cfg.vocab, cfg.dim * bytes_per_elem)}
+
+
+def analyze_table(idx: np.ndarray, cfg, *, bytes_per_elem: int = 4) -> dict:
+    """Full per-subtable intra-GnR analysis of one table's bag trace."""
+    out = {}
+    for name, (trace, rows, rb) in subtable_traces(
+        idx, cfg, bytes_per_elem=bytes_per_elem
+    ).items():
+        out[name] = analyze_bags(trace, rows, row_bytes=rb)
+    return out
+
+
+def rank_prefetch(loc: GnRLocality, *, top: int | None = None) -> np.ndarray:
+    """Row ids ordered by prefetch value (descending), ties broken stably.
+
+    The head of this ranking is what the prefetch scheduler stages and what
+    the duplication planner replicates first.
+    """
+    value = loc.prefetch_value()
+    order = np.argsort(-value, kind="stable")
+    n = int(np.count_nonzero(value)) if top is None else top
+    return order[:n]

@@ -62,6 +62,7 @@ class ModelConfig:
     tt_rank: int = 16
     tt_vocab_factors: tuple[int, int, int] | None = None
     tt_dim_factors: tuple[int, int, int] | None = None
+    tt_exec: str = "jnp"               # jnp | pallas (fused TT kernel on TPU)
     # execution-scheme knobs (hillclimb / §Perf switches)
     qr_head: str = "factorized"        # factorized | materialize (paper-faithful)
     embedding_exec: str = "gspmd"      # gspmd | twolevel (the PIM scheme)
@@ -102,6 +103,7 @@ class ModelConfig:
             tt_rank=self.tt_rank,
             tt_vocab_factors=self.tt_vocab_factors,
             tt_dim_factors=self.tt_dim_factors,
+            tt_exec=self.tt_exec,
         )
 
     def replace(self, **kw) -> "ModelConfig":
@@ -144,6 +146,10 @@ class DLRMConfig:
     tt_rank: int = 16
     tt_vocab_factors: tuple[int, int, int] | None = None
     tt_dim_factors: tuple[int, int, int] | None = None
+    # ProactivePIM cache-subsystem knobs (serving)
+    tt_exec: str = "jnp"               # jnp | pallas (fused TT kernel on TPU)
+    cache_slots: int = 1024            # prefetch-cache rows per big subtable
+    dup_budget_mb: int = 64            # per-chip replicated-subtable budget
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 

@@ -28,4 +28,9 @@ SMOKE = DLRMConfig(
     top_mlp=(64, 1),
     embedding_kind="qr",
     qr_collision=8,
+    cache_slots=128,
+)
+
+DENSE_SMOKE = dataclasses.replace(
+    SMOKE, name="dlrm-dense-smoke", embedding_kind="dense"
 )

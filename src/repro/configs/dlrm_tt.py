@@ -17,6 +17,7 @@ CONFIG = DLRMConfig(
     pooling=32,
     embedding_kind="tt",
     tt_rank=16,
+    tt_exec="pallas",              # serving runs the fused gather-contract kernel
 )
 
 # The dense baseline lives in dlrm_qr.DENSE_BASELINE (registry id "dlrm-dense").
@@ -31,4 +32,6 @@ SMOKE = DLRMConfig(
     top_mlp=(64, 1),
     embedding_kind="tt",
     tt_rank=4,
+    tt_exec="pallas",
+    cache_slots=128,
 )

@@ -67,6 +67,7 @@ DLRM_CONFIGS: dict[str, tuple[str, str]] = {
     "dlrm-qr": ("dlrm_qr", "CONFIG"),
     "dlrm-qr-smoke": ("dlrm_qr", "SMOKE"),
     "dlrm-dense": ("dlrm_qr", "DENSE_BASELINE"),
+    "dlrm-dense-smoke": ("dlrm_qr", "DENSE_SMOKE"),
     "dlrm-tt": ("dlrm_tt", "CONFIG"),
     "dlrm-tt-smoke": ("dlrm_tt", "SMOKE"),
 }

@@ -6,8 +6,14 @@ Public surface:
 * ``qr_embedding``       — weight-sharing embedding modules (dense/hashed/qr)
 * ``embedding_bag``      — multi-table gather-and-reduce (DLRM semantics)
 * ``placement``          — hot/cold tier planning (the allocation strategy)
+* ``tt_embedding``       — TT-Rec tensor-train tables (3-core factorization)
 * ``sharded_embedding``  — two-level shard_map GnR (the PIM scheme on a mesh)
+  plus the cached serving path (``cached_bag_lookup``, duplication-plan-aware
+  ``build_dup_multi_bag_gnr``)
 * ``overlap``            — compute/ICI overlap helpers
+
+The ProactivePIM cache subsystem (intra-GnR analyzer, prefetch scheduler,
+duplication planner) lives in ``repro.cache``.
 """
 
 from repro.core import (  # noqa: F401

@@ -57,6 +57,18 @@ def bag_lookup(
         q = params["q"].astype(emb.compute_dtype)[q_idx].sum(axis=-2)
         r = params["r"].astype(emb.compute_dtype)[r_idx].sum(axis=-2)
         pooled = q + r
+    elif emb.kind == "tt" and emb.tt_exec == "pallas" and weights is None:
+        # serving/jit path on the fused Pallas gather-contract kernel
+        # (tt_pooled_auto falls back to the jnp oracle off-TPU)
+        from repro.core import tt_embedding
+        from repro.kernels import ops
+
+        spec = emb.tt_spec
+        i1, i2, i3 = tt_embedding.tt_decompose(idx, spec)
+        pooled = ops.tt_pooled_auto(
+            params["g1"], params["g2"], params["g3"], i1, i2, i3,
+            dims=(spec.d1, spec.d2, spec.d3, spec.rank), exec_mode="pallas",
+        ).astype(emb.compute_dtype)
     else:
         vecs = qr_embedding.lookup(params, idx, emb)  # (batch, pooling, dim)
         if weights is not None:

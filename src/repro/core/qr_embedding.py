@@ -57,6 +57,9 @@ class EmbeddingConfig:
     tt_rank: int = 16
     tt_vocab_factors: tuple[int, int, int] | None = None
     tt_dim_factors: tuple[int, int, int] | None = None
+    # TT execution scheme: "jnp" (pure-jnp contraction) or "pallas" (fused
+    # gather-contract kernel on TPU; the jnp oracle is the CPU fallback).
+    tt_exec: str = "jnp"
 
     @property
     def qr_spec(self) -> hashing.QRSpec:

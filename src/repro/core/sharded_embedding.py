@@ -249,6 +249,188 @@ def qr_token_partial(
 
 
 # ---------------------------------------------------------------------------
+# cached serving path (ProactivePIM cache subsystem)
+# ---------------------------------------------------------------------------
+
+def cached_bag_lookup(
+    params: dict,
+    idx: jax.Array,
+    bag: BagConfig,
+    *,
+    cache_rows: jax.Array | None = None,
+    slot: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-chip cached GnR for one table — the recommendation serving path.
+
+    Consumes the prefetch scheduler's staged state
+    (``repro.cache.sram_cache.PrefetchScheduler``): ``cache_rows`` (slots,)
+    names the big-table rows resident in the cache block this batch,
+    ``slot`` (..., pooling) routes each access (-1 = miss).  The cache-block
+    gather ``big_table[cache_rows]`` *is* the staging DMA — it happens once
+    per batch, overlapped (on hardware) with the previous batch.
+
+    QR/dense route through the ``cached_gather`` Pallas kernel (hits to the
+    VMEM cache block, misses streamed); TT routes through the fused TT bag
+    kernel, whose VMEM-pinned outer cores already realize the duplicated
+    subtables — the scheduler's slot state then only models G2-row reuse.
+    """
+    from repro.kernels import ops
+
+    emb = bag.emb
+    if emb.kind == "qr":
+        q_idx, r_idx = hashing.qr_decompose(idx, emb.collision)
+        cache = params["q"][cache_rows]
+        out = ops.cached_qr_pooled(
+            params["q"], cache, params["r"], q_idx, slot, r_idx, interpret=interpret
+        )
+    elif emb.kind == "tt":
+        from repro.core import tt_embedding
+
+        spec = emb.tt_spec
+        i1, i2, i3 = tt_embedding.tt_decompose(idx, spec)
+        out = ops.tt_pooled_auto(
+            params["g1"], params["g2"], params["g3"], i1, i2, i3,
+            dims=(spec.d1, spec.d2, spec.d3, spec.rank),
+            exec_mode=emb.tt_exec, interpret=interpret,
+        )
+    elif emb.kind == "hashed":
+        # k-ary expansion doesn't fit the single-row slot map; serve uncached
+        from repro.core import embedding_bag
+
+        return embedding_bag.bag_lookup(params, idx, bag)
+    else:
+        cache = params["table"][cache_rows]
+        out = ops.cached_pooled(params["table"], cache, idx, slot, interpret=interpret)
+    if bag.combiner == "mean":
+        out = out / jnp.asarray(bag.pooling, out.dtype)
+    return out
+
+
+def make_dup_hot_tiers(tables: Sequence[dict], bags: Sequence[BagConfig], dup_plan):
+    """Hot-tier arrays per table from a DuplicationPlan.
+
+    Returns one ``{"hot_table", "hot_slot"}`` dict per bag (uniform pytree so
+    shard_map in_specs stay static); tables with nothing to replicate get a
+    1-row dummy whose slot map never matches.
+    """
+    tiers = []
+    for params, bag, tp in zip(tables, bags, dup_plan.tables):
+        big = params.get("q", params.get("g2", params.get("table")))
+        rows = tp.hot_plan.hot_slot.size
+        if tp.comm_free or tp.hot_plan.num_hot == 0:
+            tiers.append({
+                "hot_table": jnp.zeros((1, big.shape[1]), big.dtype),
+                "hot_slot": jnp.full((rows,), -1, jnp.int32),
+            })
+        else:
+            tiers.append({
+                "hot_table": big[jnp.asarray(tp.hot_plan.hot_rows, jnp.int32)],
+                "hot_slot": jnp.asarray(tp.hot_plan.hot_slot, jnp.int32),
+            })
+    return tiers
+
+
+def build_dup_multi_bag_gnr(
+    mesh: Mesh,
+    bags: Sequence[BagConfig],
+    dup_plan,
+    *,
+    batch_axis: str = "data",
+    row_axis: str = "model",
+):
+    """Duplication-plan-aware GnR: the paper's communication elimination.
+
+    Tables whose subtables are fully replicated under the plan's budget
+    (``TableDupPlan.comm_free``) are served entirely from local replicas —
+    they never enter the psum, the ICI analogue of ProactivePIM killing the
+    CPU–PIM transfer by duplicating subtables across bank groups.  The
+    remaining tables run the usual two-level partial-GnR with the plan's hot
+    tier, combined by one pooled psum.
+
+    Returned fn: fn(tables, indices (B, T, pooling), hot_tiers) -> (B, T, dim)
+    where ``hot_tiers`` comes from ``make_dup_hot_tiers``.
+    """
+    from repro.core import embedding_bag
+
+    nsh = mesh.shape[row_axis]
+    plans = [ShardPlan(b.emb, nsh) for b in bags]
+    tplans = dup_plan.tables
+
+    def local_fn(tables, indices, hot_tiers):
+        outs: list[jax.Array] = []
+        needs_psum: list[bool] = []
+        for t, (bag, plan, tp) in enumerate(zip(bags, plans, tplans)):
+            idx = indices[:, t]
+            params = tables[t]
+            if tp.comm_free:
+                # replicated everywhere -> full local lookup, no combine
+                part = embedding_bag.bag_lookup(params, idx, bag)
+                outs.append(part)
+                needs_psum.append(False)
+                continue
+            tier = hot_tiers[t]
+            if bag.emb.kind == "qr":
+                part = qr_bag_partial(
+                    params["q"], params["r"], idx, plan, axis=row_axis,
+                    hot_table=tier["hot_table"], hot_slot=tier["hot_slot"],
+                )
+            elif bag.emb.kind == "tt":
+                part = tt_bag_partial(
+                    params["g1"], params["g2"], params["g3"], idx, plan,
+                    axis=row_axis,
+                    hot_table=tier["hot_table"], hot_slot=tier["hot_slot"],
+                )
+            else:
+                part = dense_bag_partial(params["table"], idx, plan, axis=row_axis)
+            if bag.combiner == "mean":
+                part = part / jnp.asarray(bag.pooling, part.dtype)
+            outs.append(part)
+            needs_psum.append(True)
+        if any(needs_psum):
+            combined = jax.lax.psum(
+                jnp.stack([o for o, n in zip(outs, needs_psum) if n], axis=1),
+                row_axis,
+            )
+        res, si = [], 0
+        for o, n in zip(outs, needs_psum):
+            if n:
+                res.append(combined[:, si])
+                si += 1
+            else:
+                res.append(o)
+        return jnp.stack(res, axis=1)
+
+    def table_specs(bag, tp):
+        if tp.comm_free:
+            keys = {"qr": ("q", "r"), "tt": ("g1", "g2", "g3")}.get(
+                bag.emb.kind, ("table",)
+            )
+            return {k: P() for k in keys}
+        if bag.emb.kind == "qr":
+            return {"q": P(row_axis, None), "r": P()}
+        if bag.emb.kind == "tt":
+            return {"g1": P(), "g2": P(row_axis, None), "g3": P()}
+        return {"table": P(row_axis, None)}
+
+    in_specs = (
+        [table_specs(b, tp) for b, tp in zip(bags, tplans)],
+        P(batch_axis, None, None),
+        [{"hot_table": P(), "hot_slot": P()} for _ in bags],
+    )
+    out_specs = P(batch_axis, None, None)
+
+    @jax.jit
+    def fn(tables, indices, hot_tiers):
+        return jax_compat.shard_map(
+            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(tables, indices, hot_tiers)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # global wrappers
 # ---------------------------------------------------------------------------
 

@@ -236,9 +236,24 @@ def contract_rows(
 
 
 def lookup(params: dict, idx: jax.Array, cfg) -> jax.Array:
-    """Logical-row lookup ``idx -> (..., dim)`` via the 3-core contraction."""
+    """Logical-row lookup ``idx -> (..., dim)`` via the 3-core contraction.
+
+    With ``cfg.tt_exec == "pallas"`` the serving/jit path runs the fused
+    Pallas gather-contract kernel on TPU (one HBM DMA per lookup, outer cores
+    VMEM-pinned); off-TPU the pure-jnp contraction below is the fallback.
+    """
     spec = spec_for(cfg)
     i1, i2, i3 = tt_decompose(idx, spec)
+    if getattr(cfg, "tt_exec", "jnp") == "pallas" and jax.default_backend() == "tpu":
+        from repro.kernels import ops
+
+        shape = i1.shape
+        out = ops.tt_pooled_auto(
+            params["g1"], params["g2"], params["g3"],
+            i1.reshape(-1, 1), i2.reshape(-1, 1), i3.reshape(-1, 1),
+            dims=(spec.d1, spec.d2, spec.d3, spec.rank), exec_mode="pallas",
+        )
+        return out.reshape(*shape, spec.dim).astype(cfg.compute_dtype)
     compute = cfg.compute_dtype
     a = params["g1"].astype(compute)[i1]
     b = params["g2"].astype(compute)[i2]

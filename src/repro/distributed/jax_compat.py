@@ -33,8 +33,16 @@ def tree_flatten_with_path(tree, is_leaf=None):
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    """``jax.make_mesh`` with explicit Auto axis types where supported, and a
+    ``mesh_utils.create_device_mesh`` fallback for runtimes predating
+    ``jax.make_mesh`` (0.4.x)."""
     axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is not None:
-        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+    if hasattr(jax, "make_mesh"):
+        if axis_type is not None:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+            )
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)

@@ -1,0 +1,170 @@
+"""Cached pooled gather-and-reduce — the bg-PIM SRAM cache in a Pallas kernel.
+
+The ProactivePIM cache serves high-intra-GnR-locality rows from bank-group
+SRAM while the remaining rows stream from DRAM.  TPU realization:
+
+* the **cache block** — a ``(slots, dim)`` slice holding the rows the prefetch
+  scheduler staged for this batch — is mapped into VMEM once (constant
+  BlockSpec index map, resident across all grid steps);
+* the **slot map** rides in SMEM via scalar prefetch alongside the indices:
+  for each bag element the kernel reads ``slot[b, k]`` and routes the access
+  — ``slot >= 0`` selects the VMEM cache row, ``slot < 0`` selects the row
+  DMA'd from HBM by the streamed operand;
+* the **streamed operand**'s index map sends misses to ``idx[b, k]`` and pins
+  hits to block 0: Pallas elides the DMA when consecutive grid steps name the
+  same block, so runs of cache hits issue *no* HBM traffic — the kernel-level
+  analogue of the cache absorbing DRAM accesses;
+* accumulation is fp32 in a VMEM output block revisited across the K steps
+  (bank-group MAC + register file), exactly like ``gnr_bag``.
+
+Two variants: ``cached_bag`` (dense / big-table-only) and ``cached_qr_bag``
+(fused with the VMEM-resident R LUT, so one bag element costs at most one
+HBM row — and zero on a cache hit).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_DIM_BLOCK = 512
+
+
+def _cached_kernel(idx_ref, slot_ref, row_ref, cache_ref, out_ref):
+    b, k = pl.program_id(0), pl.program_id(1)
+    s = slot_ref[b, k]
+    hit = s >= 0
+    cached = cache_ref[jnp.maximum(s, 0), :][None, :].astype(jnp.float32)
+    streamed = row_ref[...].astype(jnp.float32)
+    row = jnp.where(hit, cached, streamed)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + row
+
+
+def _cached_qr_kernel(q_idx_ref, slot_ref, r_idx_ref, row_ref, cache_ref,
+                      r_lut_ref, out_ref):
+    b, k = pl.program_id(0), pl.program_id(1)
+    s = slot_ref[b, k]
+    hit = s >= 0
+    cached = cache_ref[jnp.maximum(s, 0), :][None, :].astype(jnp.float32)
+    streamed = row_ref[...].astype(jnp.float32)
+    row = jnp.where(hit, cached, streamed)
+    row = row + r_lut_ref[r_idx_ref[b, k], :][None, :].astype(jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + row
+
+
+def _stream_spec(bd: int):
+    # Misses DMA row idx[b,k]; hits pin the stream to block 0 so consecutive
+    # hits revisit the same block and Pallas skips the fetch.
+    return pl.BlockSpec(
+        (1, bd), lambda b, k, j, idx, slot, *_: (jnp.where(slot[b, k] >= 0, 0, idx[b, k]), j)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("dim_block", "interpret"))
+def cached_bag(
+    table: jax.Array,
+    cache: jax.Array,
+    idx: jax.Array,
+    slot: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Cached pooled bag: out[b] = Σ_k (slot[b,k] >= 0 ? C[slot] : T[idx]).
+
+    table: (rows, dim) in HBM; cache: (slots, dim) VMEM-resident (the staged
+    block — same dtype as table); idx/slot: (B, K) int32.  Returns (B, dim)
+    in the table dtype (fp32 accumulation inside).
+    """
+    bsz, k_steps = idx.shape
+    dim = table.shape[1]
+    bd = dim_block or min(dim, DEFAULT_DIM_BLOCK)
+    assert dim % bd == 0, f"dim {dim} not divisible by dim_block {bd}"
+    assert cache.shape[1] == dim, (cache.shape, table.shape)
+
+    grid = (bsz, k_steps, dim // bd)
+    kernel = pl.pallas_call(
+        _cached_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                _stream_spec(bd),
+                pl.BlockSpec((cache.shape[0], bd), lambda b, k, j, idx, slot: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bd), lambda b, k, j, idx, slot: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )
+    out = kernel(idx.astype(jnp.int32), slot.astype(jnp.int32), table, cache)
+    return out.astype(table.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dim_block", "interpret"))
+def cached_qr_bag(
+    q_table: jax.Array,
+    cache: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    slot: jax.Array,
+    r_idx: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Cached pooled QR bag:
+    out[b] = Σ_k ( (slot >= 0 ? C[slot] : Q[q_idx]) + R[r_idx] ).
+
+    The R LUT and the cache block are both VMEM-resident; only cache misses
+    touch HBM.  q_idx/slot/r_idx: (B, K) int32 -> (B, dim).
+    """
+    bsz, k_steps = q_idx.shape
+    dim = q_table.shape[1]
+    bd = dim_block or min(dim, DEFAULT_DIM_BLOCK)
+    assert dim % bd == 0, f"dim {dim} not divisible by dim_block {bd}"
+    assert cache.shape[1] == dim and r_lut.shape[1] == dim
+
+    grid = (bsz, k_steps, dim // bd)
+    kernel = pl.pallas_call(
+        _cached_qr_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                _stream_spec(bd),
+                pl.BlockSpec(
+                    (cache.shape[0], bd), lambda b, k, j, qi, sl, ri: (0, j)
+                ),
+                pl.BlockSpec(
+                    (r_lut.shape[0], bd), lambda b, k, j, qi, sl, ri: (0, j)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, bd), lambda b, k, j, qi, sl, ri: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )
+    out = kernel(
+        q_idx.astype(jnp.int32), slot.astype(jnp.int32), r_idx.astype(jnp.int32),
+        q_table, cache, r_lut,
+    )
+    return out.astype(q_table.dtype)

@@ -12,8 +12,11 @@ Dispatch rules:
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import gnr_bag as _gnr
 from repro.kernels import qr_gather as _qr
@@ -107,6 +110,59 @@ def tt_pooled(
     return out.reshape(*lead, dim)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _tt_pooled_diff(g1, g2, g3, i1, i2, i3, dims, interpret):
+    """Kernel forward with a reference-recompute vjp (flash_attention idiom):
+    pallas_call has no autodiff rule, so the backward pass re-derives the
+    core cotangents through the jnp oracle — identical math, fp32 throughout.
+    Keeps ``tt_exec="pallas"`` legal inside value_and_grad (training)."""
+    return tt_pooled(g1, g2, g3, i1, i2, i3, dims=dims, interpret=interpret)
+
+
+def _tt_pooled_diff_fwd(g1, g2, g3, i1, i2, i3, dims, interpret):
+    out = _tt_pooled_diff(g1, g2, g3, i1, i2, i3, dims, interpret)
+    return out, (g1, g2, g3, i1, i2, i3)
+
+
+def _tt_pooled_diff_bwd(dims, interpret, res, ct):
+    g1, g2, g3, i1, i2, i3 = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: ref.tt_bag_ref(a, b, c, i1, i2, i3, dims=dims), g1, g2, g3
+    )
+    dg1, dg2, dg3 = vjp(ct)
+    zero = lambda i: np.zeros(i.shape, jax.dtypes.float0)
+    return dg1, dg2, dg3, zero(i1), zero(i2), zero(i3)
+
+
+_tt_pooled_diff.defvjp(_tt_pooled_diff_fwd, _tt_pooled_diff_bwd)
+
+
+def tt_pooled_auto(
+    g1: jax.Array,
+    g2: jax.Array,
+    g3: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    i3: jax.Array,
+    *,
+    dims: tuple[int, int, int, int],
+    exec_mode: str = "jnp",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pooled TT bag with config-driven kernel dispatch (serving/jit path).
+
+    ``exec_mode="pallas"`` routes to the fused gather-contract kernel on TPU
+    (or in interpret mode when ``interpret=True`` is forced — tests); on CPU
+    the pure-jnp oracle is the fallback, so the same config runs everywhere.
+    ``exec_mode="jnp"`` always uses the oracle.  The kernel path is
+    differentiable via a reference-recompute vjp, so the flag is safe in
+    training configs too.
+    """
+    if exec_mode == "pallas" and (interpret or jax.default_backend() == "tpu"):
+        return _tt_pooled_diff(g1, g2, g3, i1, i2, i3, dims, bool(interpret))
+    return ref.tt_bag_ref(g1, g2, g3, i1, i2, i3, dims=dims)
+
+
 def tt_lookup(
     g1: jax.Array,
     g2: jax.Array,
@@ -127,6 +183,61 @@ def tt_lookup(
     )
     d1, d2, d3, _ = dims
     return out.reshape(*shape, d1 * d2 * d3)
+
+
+def cached_pooled(
+    table: jax.Array,
+    cache: jax.Array,
+    idx: jax.Array,
+    slot: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Cached pooled bag for index shape (..., K) -> (..., D).
+
+    ``cache`` is the prefetch scheduler's staged block; ``slot`` its per-access
+    routing (-1 = miss -> streamed HBM row).
+    """
+    from repro.kernels import cached_gather as _cg
+
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.cached_bag_ref(table, cache, idx, slot)
+    *lead, k = idx.shape
+    out = _cg.cached_bag(
+        table, cache, idx.reshape(-1, k), slot.reshape(-1, k),
+        dim_block=bd, interpret=interpret,
+    )
+    return out.reshape(*lead, dim)
+
+
+def cached_qr_pooled(
+    q_table: jax.Array,
+    cache: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    slot: jax.Array,
+    r_idx: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Cached pooled QR bag for index shape (..., K) -> (..., D)."""
+    from repro.kernels import cached_gather as _cg
+
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = q_table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.cached_qr_bag_ref(q_table, cache, r_lut, q_idx, slot, r_idx)
+    *lead, k = q_idx.shape
+    out = _cg.cached_qr_bag(
+        q_table, cache, r_lut,
+        q_idx.reshape(-1, k), slot.reshape(-1, k), r_idx.reshape(-1, k),
+        dim_block=bd, interpret=interpret,
+    )
+    return out.reshape(*lead, dim)
 
 
 def gnr_pooled_dense(

@@ -66,6 +66,39 @@ def tt_bag_ref(
     return rows.sum(axis=-2).astype(g2.dtype)
 
 
+def cached_bag_ref(
+    table: jax.Array, cache: jax.Array, idx: jax.Array, slot: jax.Array
+) -> jax.Array:
+    """Cached pooled bag: out[b] = Σ_k (slot[b,k] >= 0 ? C[slot] : T[idx]).
+
+    ``slot`` routes each access: >= 0 selects the staged cache row, -1 the
+    backing table (fp32 accumulation; kernel matches this).
+    """
+    hit = (slot >= 0)[..., None]
+    rows = jnp.where(
+        hit,
+        cache[jnp.maximum(slot, 0)].astype(jnp.float32),
+        table[idx].astype(jnp.float32),
+    )
+    return rows.sum(axis=-2).astype(table.dtype)
+
+
+def cached_qr_bag_ref(
+    q_table: jax.Array, cache: jax.Array, r_lut: jax.Array,
+    q_idx: jax.Array, slot: jax.Array, r_idx: jax.Array,
+) -> jax.Array:
+    """Cached pooled QR bag:
+    out[b] = Σ_k ( (slot >= 0 ? C[slot] : Q[q_idx]) + R[r_idx] )."""
+    hit = (slot >= 0)[..., None]
+    q_rows = jnp.where(
+        hit,
+        cache[jnp.maximum(slot, 0)].astype(jnp.float32),
+        q_table[q_idx].astype(jnp.float32),
+    )
+    rows = q_rows + r_lut[r_idx].astype(jnp.float32)
+    return rows.sum(axis=-2).astype(q_table.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Naive full-matrix attention oracle with GQA (fp32 softmax)."""
     b, h, sq, d = q.shape

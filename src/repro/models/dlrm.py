@@ -38,6 +38,7 @@ def make_bags(cfg: DLRMConfig) -> list[BagConfig]:
         tt_rank=cfg.tt_rank,
         tt_vocab_factors=cfg.tt_vocab_factors,
         tt_dim_factors=cfg.tt_dim_factors,
+        tt_exec=cfg.tt_exec,
     )
     return [BagConfig(emb=emb, pooling=cfg.pooling) for _ in range(cfg.num_tables)]
 
@@ -192,6 +193,20 @@ def forward_dlrm(params, dense: jax.Array, idx: jax.Array, cfg: DLRMConfig) -> j
     top_in = jnp.concatenate([bottom, z], axis=-1)
     logit = _mlp_fwd(params["top"], top_in, cfg.cdtype)[:, 0]
     return logit.astype(jnp.float32)
+
+
+def forward_from_pooled(
+    params, dense: jax.Array, pooled: jax.Array, cfg: DLRMConfig
+) -> jax.Array:
+    """CTR logits from precomputed pooled embeddings (B, T, dim) -> (B,).
+
+    The recommendation-serving pipeline (``repro.launch.serve_rec``) computes
+    ``pooled`` through the cached/fused kernels and reuses the interaction +
+    MLP stack unchanged."""
+    bottom = _mlp_fwd(params["bottom"], dense, cfg.cdtype, final_linear=False)
+    z = interact(bottom.astype(cfg.cdtype), pooled.astype(cfg.cdtype))
+    top_in = jnp.concatenate([bottom, z], axis=-1)
+    return _mlp_fwd(params["top"], top_in, cfg.cdtype)[:, 0].astype(jnp.float32)
 
 
 def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:

@@ -62,6 +62,60 @@ def test_bandwidth_balanced_fraction_bounds():
     assert f_fast <= f
 
 
+def test_profile_counts_empty_trace():
+    counts = placement.profile_counts(np.empty((0,), dtype=np.int64), 16)
+    assert counts.shape == (16,) and counts.sum() == 0
+    # planning over an all-zero profile is legal and replicates nothing useful
+    plan = placement.plan_tiers(counts, request_share=0.8)
+    assert plan.expected_hot_hit == 0.0
+    assert plan.num_hot <= 16
+
+
+def test_profile_counts_multi_dim_trace():
+    trace = np.array([[1, 1], [3, 1]])
+    counts = placement.profile_counts(trace, 5)
+    assert counts.tolist() == [0, 3, 0, 1, 0]
+
+
+def test_plan_tiers_uniform_counts():
+    """No skew -> request share needs a proportional row share, and every
+    hot-fraction choice hits exactly its fraction of requests."""
+    counts = np.full(100, 7, dtype=np.int64)
+    plan = placement.plan_tiers(counts, request_share=0.5)
+    assert plan.num_hot == 50
+    plan = placement.plan_tiers(counts, hot_fraction=0.2)
+    assert plan.expected_hot_hit == pytest.approx(0.2)
+
+
+def test_plan_tiers_single_row_table():
+    counts = np.array([42], dtype=np.int64)
+    plan = placement.plan_tiers(counts, request_share=0.8)
+    assert plan.num_hot == 1
+    assert plan.expected_hot_hit == 1.0
+    assert plan.hot_slot.tolist() == [0]
+    # hot_fraction rounding can't exceed the table
+    plan = placement.plan_tiers(counts, hot_fraction=1.0)
+    assert plan.num_hot == 1
+
+
+def test_bandwidth_balanced_fraction_clamping():
+    counts = _counts()
+    # ICI faster than HBM -> no hot tier needed -> clamps at 0.0
+    f = placement.bandwidth_balanced_fraction(
+        counts=counts, hbm_gbps=100.0, ici_gbps_per_link=100.0, ici_links=4
+    )
+    assert f == 0.0
+    # ICI vanishing -> everything must be local, clamped below 1.0
+    f = placement.bandwidth_balanced_fraction(
+        counts=counts, ici_gbps_per_link=1e-6
+    )
+    assert f == pytest.approx(0.999)
+    # safety scales the cold share monotonically
+    f_tight = placement.bandwidth_balanced_fraction(counts=counts, safety=0.5)
+    f_loose = placement.bandwidth_balanced_fraction(counts=counts, safety=1.0)
+    assert f_tight >= f_loose
+
+
 def test_hot_vector_reduction_curve():
     """The paper's Fig. 12(a): quotient folding shrinks the hot set, but
     sub-linearly (hot rows are scattered, not clustered)."""
