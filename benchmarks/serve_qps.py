@@ -1,0 +1,64 @@
+"""Measured serving throughput: the packed megakernel pipeline end-to-end.
+
+Runs the ``serve_rec`` driver (offline plan -> packed tables -> per-batch
+megakernel gather + prefetch staging -> interaction/MLP head) on the dense,
+QR, and TT DLRM configs, in both pipeline modes:
+
+* ``sequential`` — gather, head, host sync, every batch (the baseline);
+* ``overlap``    — batch ``t+1``'s prefetch + packed gather dispatched while
+  batch ``t``'s head runs; one host sync at the tail of the stream.
+
+Emitted rows carry **measured wall-clock** (us per steady-state batch) and
+steady-state QPS — the cross-PR perf trajectory the BENCH JSON artifacts
+track (earlier PRs only recorded modeled traffic).  The overlap/sequential
+ratio is the double-buffering win; parity of the two modes' logits is
+asserted by the tier-1 suite (`tests/test_packed_tables.py`).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def run(tiny: bool = False) -> None:
+    import jax
+
+    from repro.configs import registry
+    from repro.launch import serve_rec
+    from repro.models import dlrm
+
+    # smoke-sized tables on CPU hosts; batch/batches set the measured load.
+    # Wall-clock on shared CI hosts is noisy at this scale, so each mode is
+    # measured best-of-`repeats` (the time_jit idiom applied to the pipeline).
+    batch, batches, repeats = (8, 6, 3) if tiny else (32, 10, 3)
+    for arch in ("dlrm-dense", "dlrm-qr", "dlrm-tt"):
+        cfg = registry.get_dlrm(f"{arch}-smoke")
+        params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+        state = serve_rec.build_serve_state(cfg, shards=4, alpha=1.05, seed=0)
+        # interleave the modes' repeats so host-load drift hits both equally
+        best: dict = {}
+        for _ in range(repeats):
+            for mode in ("sequential", "overlap"):
+                res = serve_rec.run_pipeline(
+                    cfg, batch=batch, batches=batches, mode=mode,
+                    state=state, params=params,
+                )
+                if mode not in best or res["wall_s"] < best[mode]["wall_s"]:
+                    best[mode] = res
+        qps = {}
+        for mode in ("sequential", "overlap"):
+            res = best[mode]
+            qps[mode] = res["qps"]
+            us_per_batch = res["wall_s"] * 1e6 / max(1, batches - 1)
+            emit(
+                f"serve_qps/{arch}_{mode}", us_per_batch,
+                f"qps={res['qps']:.1f} hit={res['hit_rate']:.3f} "
+                f"staged/batch={res['staged_per_batch']:.1f} "
+                f"batch={batch} batches={batches} best_of={repeats}",
+            )
+        ratio = qps["overlap"] / max(qps["sequential"], 1e-9)
+        emit(
+            f"serve_qps/{arch}_overlap_speedup", 0.0,
+            f"overlap/sequential={ratio:.2f}x "
+            f"({qps['overlap']:.1f} vs {qps['sequential']:.1f} QPS)",
+        )

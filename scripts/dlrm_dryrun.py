@@ -111,6 +111,7 @@ def lower(cfg, tag: str, batch: int = 65536) -> dict:
         "chips": mesh.size,
     }
     path = f"experiments/dryrun/pod1/dlrm__{tag}.json"
+    os.makedirs(os.path.dirname(path), exist_ok=True)
     with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as g:
         g.write(hlo)
     with open(path, "w") as f:

@@ -67,6 +67,7 @@ class TableDupPlan:
     decisions: tuple[SubtableDecision, ...]
     hot_plan: placement.TierPlan            # hot tier over big-table rows
     touches_per_lookup: int                 # subtable fetches one lookup makes
+    cache_slots: int = 0                    # prefetch-cache slot budget (0 = unset)
 
     @property
     def replicated_bytes(self) -> int:
@@ -166,11 +167,15 @@ def plan_duplication(
     num_shards: int = 1,
     budget_bytes: int = DEFAULT_BUDGET,
     bytes_per_elem: int = 4,
+    slot_budgets: Sequence[int] | None = None,
 ) -> DuplicationPlan:
     """Choose replicated vs row-sharded subtables under a per-chip budget.
 
     ``counts_per_table``: logical-row access profiles (``profile_counts`` on a
     trace), one per bag; folding onto physical subtable rows happens here.
+    ``slot_budgets`` (optional, one per bag) records the analyzer-driven
+    prefetch-cache slot split (``intra_gnr.split_slot_budget``) on the plan,
+    so serving state can be rebuilt from the plan alone.
     """
     infos = [
         _table_candidates(bag, np.asarray(cnt, dtype=np.int64), bytes_per_elem)
@@ -231,6 +236,7 @@ def plan_duplication(
             TableDupPlan(
                 kind=bags[t].emb.kind, big=big, decisions=tuple(decs),
                 hot_plan=hot, touches_per_lookup=touches,
+                cache_slots=0 if slot_budgets is None else int(slot_budgets[t]),
             )
         )
     return DuplicationPlan(

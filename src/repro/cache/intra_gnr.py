@@ -133,6 +133,45 @@ def analyze_table(idx: np.ndarray, cfg, *, bytes_per_elem: int = 4) -> dict:
     return out
 
 
+def split_slot_budget(
+    values: "list[np.ndarray]", total_slots: int, *, min_slots: int = 1
+) -> list[int]:
+    """Waterfill a global cache-slot budget across tables by prefetch value.
+
+    ``values[t]`` is table ``t``'s per-row prefetch value (``prefetch_value``
+    of its big subtable).  Giving a slot to a table captures its
+    next-highest-value row, so the exact greedy is a waterfill: pour slots
+    into whichever table's next marginal row is most valuable, until the
+    budget is spent.  Replaces the single per-table ``cache_slots`` knob —
+    tables whose traces show more intra-GnR/inter-batch reuse get more slots.
+
+    Every table is guaranteed ``min_slots`` (a scheduler needs at least one
+    slot) — this per-table floor takes precedence over the total, so a
+    starved budget (``total_slots < min_slots * len(values)``) over-allocates
+    to honor it.  No table is given more slots than it has rows (a rowless
+    table gets zero).  Otherwise budgets sum to <= ``total_slots``.
+    """
+    num_t = len(values)
+    if num_t == 0:
+        return []
+    caps = [int(v.size) for v in values]
+    alloc = [min(min_slots, cap) for cap in caps]
+    remaining = total_slots - sum(alloc)
+    if remaining <= 0:
+        return alloc
+    # marginal values beyond the guaranteed base, highest first across tables
+    cand_v, cand_t = [], []
+    for t, v in enumerate(values):
+        sv = np.sort(np.asarray(v, dtype=np.float64))[::-1][alloc[t]: caps[t]]
+        cand_v.append(sv)
+        cand_t.append(np.full(sv.size, t, dtype=np.int64))
+    all_v = np.concatenate(cand_v) if cand_v else np.empty(0)
+    all_t = np.concatenate(cand_t) if cand_t else np.empty(0, np.int64)
+    order = np.argsort(-all_v, kind="stable")[:remaining]
+    extra = np.bincount(all_t[order], minlength=num_t)
+    return [int(a + e) for a, e in zip(alloc, extra)]
+
+
 def rank_prefetch(loc: GnRLocality, *, top: int | None = None) -> np.ndarray:
     """Row ids ordered by prefetch value (descending), ties broken stably.
 

@@ -149,6 +149,14 @@ class DLRMConfig:
     # ProactivePIM cache-subsystem knobs (serving)
     tt_exec: str = "jnp"               # jnp | pallas (fused TT kernel on TPU)
     cache_slots: int = 1024            # prefetch-cache rows per big subtable
+    # "adaptive": cache_slots * num_tables is a GLOBAL budget waterfilled
+    # across tables by the intra-GnR analyzer's prefetch value
+    # (cache.intra_gnr.split_slot_budget); "uniform": cache_slots per table.
+    cache_slot_policy: str = "adaptive"
+    # Ceiling on the packed VMEM cache block (all tables' slots ride one
+    # resident buffer in the megakernel) — the bg-PIM SRAM size class.  The
+    # global slot budget is clamped so slots * row_bytes fits this.
+    cache_vmem_mb: int = 8
     dup_budget_mb: int = 64            # per-chip replicated-subtable budget
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"

@@ -7,9 +7,12 @@ Public surface:
 * ``embedding_bag``      — multi-table gather-and-reduce (DLRM semantics)
 * ``placement``          — hot/cold tier planning (the allocation strategy)
 * ``tt_embedding``       — TT-Rec tensor-train tables (3-core factorization)
+* ``packed_tables``      — packed multi-table layout feeding the megakernel
+  (one buffer / one index stream / one dispatch for every table's bag)
 * ``sharded_embedding``  — two-level shard_map GnR (the PIM scheme on a mesh)
   plus the cached serving path (``cached_bag_lookup``, duplication-plan-aware
-  ``build_dup_multi_bag_gnr``)
+  ``build_dup_multi_bag_gnr``) — packable bag sets run the packed megakernel
+  partials (``packed_local_partial``)
 * ``overlap``            — compute/ICI overlap helpers
 
 The ProactivePIM cache subsystem (intra-GnR analyzer, prefetch scheduler,

@@ -27,6 +27,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hashing
@@ -249,6 +250,145 @@ def qr_token_partial(
 
 
 # ---------------------------------------------------------------------------
+# packed-table local GnR (the multi-table megakernel inside shard_map)
+# ---------------------------------------------------------------------------
+
+def packed_local_partial(
+    tables: Sequence[dict],
+    indices: jax.Array,
+    bags: Sequence[BagConfig],
+    plans: Sequence[ShardPlan],
+    *,
+    axis: str = "model",
+    hot_tiers: Sequence[dict] | None = None,
+    comm_free: Sequence[bool] | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Every table's local pooled partial in ONE megakernel dispatch.
+
+    Runs inside ``shard_map``.  The per-table loop of ``*_bag_partial`` calls
+    becomes index arithmetic: this shard's local big-subtable shards (plus the
+    replicated hot-tier segments) are concatenated into one packed buffer with
+    a trailing all-zero row, and every access is *routed* instead of masked —
+
+      hot row & my bag position  -> its hot-segment slot,
+      cold row owned here        -> the local-shard segment,
+      anything else              -> the zero row (contributes nothing),
+
+    so the single ``ops.packed_multi_pooled`` call (Pallas megakernel on TPU,
+    packed jnp oracle elsewhere) computes partials whose psum over ``axis``
+    counts every contribution exactly once — the same math as the per-table
+    partials, minus T-1 dispatches.  R LUTs (QR) are packed and spread across
+    shards by bag position; TT outer cores are packed replicated.
+
+    ``comm_free[t]`` marks tables whose params are full local replicas (the
+    duplication planner's communication kill): every access is served locally
+    and their output columns must be EXCLUDED from the caller's psum.
+    Returns (B, T, dim) partials in the compute dtype.
+    """
+    from repro.core import packed_tables, tt_embedding
+    from repro.kernels import ops
+
+    emb0 = bags[0].emb
+    kind = emb0.kind
+    num_t = len(bags)
+    compute = emb0.compute_dtype
+    shard = jax.lax.axis_index(axis)
+    nsh = plans[0].num_shards
+    pooling = indices.shape[-1]
+    cf = tuple(bool(c) for c in (comm_free or [False] * num_t))
+    cf_b = jnp.asarray(cf)[None, :, None]
+    pos_mine = ((jnp.arange(pooling, dtype=jnp.int32) % nsh) == shard)[None, None, :]
+
+    segs = [tables[t][packed_tables.big_key(kind)] for t in range(num_t)]
+    parts = list(segs)
+    hot_sizes: list[int] = []
+    if hot_tiers is not None:
+        hots = [hot_tiers[t]["hot_table"] for t in range(num_t)]
+        hot_sizes = [int(h.shape[0]) for h in hots]
+        parts += hots
+    width = int(segs[0].shape[1])
+    big = packed_tables.concat_with_zero(parts, compute)
+    seg_sizes = [int(s.shape[0]) for s in segs]
+    seg_off = np.cumsum([0] + seg_sizes)
+    hot_off = seg_off[-1] + np.cumsum([0] + hot_sizes)
+    zero_row = int(seg_off[-1] + sum(hot_sizes))
+    seg_off_a = jnp.asarray(seg_off[:num_t], jnp.int32)[None, :, None]
+    rps = jnp.asarray(
+        [plans[t].rows_per_shard for t in range(num_t)], jnp.int32
+    )[None, :, None]
+
+    def route_big(big_idx: jax.Array) -> jax.Array:
+        """Table-local big-subtable rows (B, T, K) -> packed stream rows."""
+        local = big_idx - shard * rps
+        owned = ((local >= 0) & (local < rps)) | cf_b
+        local = jnp.where(cf_b, big_idx, local)          # replicas: global row
+        stream = jnp.where(owned, seg_off_a + local, zero_row)
+        if hot_tiers is not None:
+            hot_slot = jnp.stack(
+                [hot_tiers[t]["hot_slot"] for t in range(num_t)]
+            )                                            # (T, big_rows)
+            slot = hot_slot[jnp.arange(num_t)[None, :, None], big_idx]
+            is_hot = slot >= 0
+            hot_off_a = jnp.asarray(hot_off[:num_t], jnp.int32)[None, :, None]
+            stream = jnp.where(
+                is_hot, jnp.where(pos_mine, hot_off_a + slot, zero_row), stream
+            )
+        return stream
+
+    miss = jnp.full(indices.shape, -1, jnp.int32)
+    cache = jnp.zeros((1, width), compute)
+
+    if kind == "qr":
+        q_idx, r_idx = hashing.qr_decompose(indices, emb0.collision)
+        r_segs = [tables[t]["r"] for t in range(num_t)]
+        r_sizes = [int(r.shape[0]) for r in r_segs]
+        r_off = np.cumsum([0] + r_sizes)
+        r_packed = packed_tables.concat_with_zero(r_segs, compute)
+        r_off_a = jnp.asarray(r_off[:num_t], jnp.int32)[None, :, None]
+        # replicated LUT: spread across shards by bag position; comm-free
+        # tables take every position (their column skips the psum)
+        r_stream = jnp.where(
+            pos_mine | cf_b, r_off_a + r_idx, int(r_off[-1])
+        )
+        out = ops.packed_multi_pooled(
+            {"q": big, "r": r_packed, "cache": cache},
+            {"q_idx": route_big(q_idx), "slot": miss, "r_idx": r_stream},
+            kind="qr", interpret=interpret,
+        )
+    elif kind == "tt":
+        spec = emb0.tt_spec
+        i1, i2, i3 = tt_embedding.tt_decompose(indices, spec)
+        t_ids = jnp.arange(num_t, dtype=jnp.int32)[None, :, None]
+        g1 = jnp.concatenate(
+            [tables[t]["g1"].astype(compute) for t in range(num_t)], axis=0
+        )
+        g3 = jnp.concatenate(
+            [tables[t]["g3"].astype(compute) for t in range(num_t)], axis=0
+        )
+        out = ops.packed_multi_pooled(
+            {"g1": g1, "g2": big, "g3": g3, "cache": cache},
+            {
+                "i1": i1 + t_ids * spec.v1,
+                "i2": route_big(i2),
+                "i3": i3 + t_ids * spec.v3,
+                "slot": miss,
+            },
+            kind="tt", dims=(spec.d1, spec.d2, spec.d3, spec.rank),
+            interpret=interpret,
+        )
+    else:
+        out = ops.packed_multi_pooled(
+            {"table": big, "cache": cache},
+            {"idx": route_big(indices), "slot": miss},
+            kind="dense", interpret=interpret,
+        )
+
+    scale = packed_tables.combiner_scale(bags, out.dtype)
+    return (out * scale[None, :, None]).astype(compute)
+
+
+# ---------------------------------------------------------------------------
 # cached serving path (ProactivePIM cache subsystem)
 # ---------------------------------------------------------------------------
 
@@ -351,13 +491,27 @@ def build_dup_multi_bag_gnr(
     Returned fn: fn(tables, indices (B, T, pooling), hot_tiers) -> (B, T, dim)
     where ``hot_tiers`` comes from ``make_dup_hot_tiers``.
     """
-    from repro.core import embedding_bag
+    from repro.core import embedding_bag, packed_tables
 
     nsh = mesh.shape[row_axis]
     plans = [ShardPlan(b.emb, nsh) for b in bags]
     tplans = dup_plan.tables
+    use_packed = packed_tables.packable(bags)
+    cf = [tp.comm_free for tp in tplans]
+    psum_cols = [t for t, c in enumerate(cf) if not c]
 
     def local_fn(tables, indices, hot_tiers):
+        if use_packed:
+            # one megakernel dispatch for all tables; only the non-comm-free
+            # columns ride the pooled psum (the paper's communication kill)
+            parts = packed_local_partial(
+                tables, indices, bags, plans, axis=row_axis,
+                hot_tiers=hot_tiers, comm_free=cf,
+            )
+            if psum_cols:
+                combined = jax.lax.psum(parts[:, psum_cols], row_axis)
+                parts = parts.at[:, psum_cols].set(combined)
+            return parts
         outs: list[jax.Array] = []
         needs_psum: list[bool] = []
         for t, (bag, plan, tp) in enumerate(zip(bags, plans, tplans)):
@@ -475,10 +629,19 @@ def build_multi_bag_gnr(
     ``tables[t]`` holds padded ``q``(+``r``) or ``table``; ``hot_tiers[t]`` holds
     ``hot_table`` + ``hot_slot`` when the tier plan replicates rows.
     """
+    from repro.core import packed_tables
+
     nsh = mesh.shape[row_axis]
     plans = [ShardPlan(b.emb, nsh) for b in bags]
+    use_packed = packed_tables.packable(bags)
 
     def local_fn(tables, indices, hot_tiers):
+        if use_packed:
+            parts = packed_local_partial(
+                tables, indices, bags, plans, axis=row_axis,
+                hot_tiers=hot_tiers,
+            )
+            return jax.lax.psum(parts, row_axis)     # base-die combine
         outs = []
         for t, (bag, plan) in enumerate(zip(bags, plans)):
             idx = indices[:, t]

@@ -165,18 +165,26 @@ def spec_for(cfg) -> TTSpec:
 # index factorization
 # ---------------------------------------------------------------------------
 
+def tt_decompose_factors(
+    idx: jax.Array, v2: int, v3: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Mixed-radix split ``idx = (i1*v2 + i2)*v3 + i3`` (int32) — the single
+    source of the TT index arithmetic (spec-less form for the packed layout)."""
+    idx = idx.astype(jnp.int32)
+    i3 = idx % v3
+    rest = idx // v3
+    i2 = rest % v2
+    i1 = rest // v2
+    return i1, i2, i3
+
+
 def tt_decompose(idx: jax.Array, spec: TTSpec) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Logical index -> (i1, i2, i3) core-row indices (int32).
 
-    Mixed-radix over ``(v1, v2, v3)``: ``idx = (i1*v2 + i2)*v3 + i3`` — unique
-    per logical row, the TT analogue of the QR complementary partition.
+    Mixed-radix over ``(v1, v2, v3)`` — unique per logical row, the TT
+    analogue of the QR complementary partition.
     """
-    idx = idx.astype(jnp.int32)
-    i3 = idx % spec.v3
-    rest = idx // spec.v3
-    i2 = rest % spec.v2
-    i1 = rest // spec.v2
-    return i1, i2, i3
+    return tt_decompose_factors(idx, spec.v2, spec.v3)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,12 @@ jit'd surface with shape dispatch and CPU fallbacks.
 * ``tt_gather``        — fused TT-Rec gather-contract bag: outer cores pinned
                          in VMEM (bg-PIM SRAM cache), middle core streamed by
                          scalar-prefetched index, fp32 chained contraction
+* ``cached_gather``    — slot-map-routed cached bag (hits read the VMEM cache
+                         block staged by the prefetch scheduler)
+* ``packed_gather``    — multi-table megakernel: every table's pooled bag in
+                         ONE grid over packed buffers (dense/QR/TT variants,
+                         cache-slot routing folded in) — replaces the
+                         per-table kernel loop on the serving + sharded paths
 * ``flash_attention``  — VMEM-resident online-softmax attention (kills the
                          dominant memory-roofline term; see EXPERIMENTS §Perf)
 """

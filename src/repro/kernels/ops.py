@@ -13,6 +13,7 @@ Dispatch rules:
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +28,43 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+_DIM_BLOCK_WARNED: set[int] = set()
+
+
+def _warn_dim_once(dim: int, message: str) -> None:
+    if dim not in _DIM_BLOCK_WARNED:
+        _DIM_BLOCK_WARNED.add(dim)
+        warnings.warn(message, stacklevel=3)
+
+
 def _pick_dim_block(dim: int) -> int | None:
+    """Lane-tile choice for the dim-tiled kernels, with an explicit ladder:
+
+    * ``dim % 128 == 0``  -> the largest of 512/256/128 that divides dim
+      (the fast path every assigned config hits);
+    * ``dim % 8 == 0``    -> the whole dim as a single tile (Mosaic pads to
+      the 128 lane width, wasting lanes) — warned once per dim;
+    * otherwise           -> ``None``: the caller must take the pure-jnp
+      reference path — warned once per dim.
+    """
     for bd in (512, 256, 128):
         if dim % bd == 0:
             return min(bd, dim)
-    return None if dim % 8 else dim  # small test dims: single tile; else fallback
+    if dim % 8 == 0:
+        _warn_dim_once(
+            dim,
+            f"embedding dim {dim} is not divisible by 128: the Pallas kernel "
+            f"runs it as a single {dim}-wide tile, padding to the 128 lane "
+            "width. Use a 128-multiple dim for full lane utilization.",
+        )
+        return dim
+    _warn_dim_once(
+        dim,
+        f"embedding dim {dim} has no 8-aligned tile: falling back to the "
+        "pure-jnp reference path (no Pallas kernel). Use an 8-multiple dim "
+        "to run the fused kernel.",
+    )
+    return None
 
 
 def qr_lookup(
@@ -238,6 +271,228 @@ def cached_qr_pooled(
         dim_block=bd, interpret=interpret,
     )
     return out.reshape(*lead, dim)
+
+
+# ---------------------------------------------------------------------------
+# packed-table megakernel wrappers (multi-table fused gather; see
+# repro.kernels.packed_gather / repro.core.packed_tables)
+# ---------------------------------------------------------------------------
+
+def packed_dense_pooled(
+    table: jax.Array,
+    cache: jax.Array,
+    idx: jax.Array,
+    slot: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed dense megabag for index shape (..., K) -> (..., D).
+
+    ``idx`` rows are global packed-buffer rows (per-table offsets applied by
+    ``repro.core.packed_tables``); ``slot`` routes into the packed cache block
+    (-1 = miss -> streamed HBM row)."""
+    from repro.kernels import packed_gather as _pg
+
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.packed_bag_ref(table, cache, idx, slot)
+    *lead, k = idx.shape
+    out = _pg.packed_bag(
+        table, cache, idx.reshape(-1, k), slot.reshape(-1, k),
+        dim_block=bd, interpret=interpret,
+    )
+    return out.reshape(*lead, dim)
+
+
+def packed_qr_pooled(
+    q_table: jax.Array,
+    cache: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    slot: jax.Array,
+    r_idx: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed QR megabag for index shape (..., K) -> (..., D)."""
+    from repro.kernels import packed_gather as _pg
+
+    interpret = _interpret_default() if interpret is None else interpret
+    dim = q_table.shape[1]
+    bd = _pick_dim_block(dim)
+    if bd is None:
+        return ref.packed_qr_bag_ref(q_table, cache, r_lut, q_idx, slot, r_idx)
+    *lead, k = q_idx.shape
+    out = _pg.packed_qr_bag(
+        q_table, cache, r_lut,
+        q_idx.reshape(-1, k), slot.reshape(-1, k), r_idx.reshape(-1, k),
+        dim_block=bd, interpret=interpret,
+    )
+    return out.reshape(*lead, dim)
+
+
+def packed_tt_pooled(
+    g1: jax.Array,
+    g2: jax.Array,
+    g3: jax.Array,
+    cache: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    i3: jax.Array,
+    slot: jax.Array,
+    *,
+    dims: tuple[int, int, int, int],
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed TT megabag for index shape (..., K) -> (..., D)."""
+    from repro.kernels import packed_gather as _pg
+
+    interpret = _interpret_default() if interpret is None else interpret
+    d1, d2, d3, _ = dims
+    if (d1 * d2 * d3) % 8:
+        return ref.packed_tt_bag_ref(g1, g2, g3, cache, i1, i2, i3, slot, dims=dims)
+    *lead, k = i1.shape
+    out = _pg.packed_tt_bag(
+        g1, g2, g3, cache,
+        i1.reshape(-1, k), i2.reshape(-1, k), i3.reshape(-1, k),
+        slot.reshape(-1, k),
+        dims=dims, interpret=interpret,
+    )
+    return out.reshape(*lead, d1 * d2 * d3)
+
+
+# Differentiable megakernel entry points (reference-recompute vjp, the
+# tt_pooled_auto idiom): pallas_call has no autodiff rule, so the backward
+# pass re-derives table/cache cotangents through the packed jnp oracle —
+# identical math, fp32 throughout.  Index streams get float0 cotangents.
+
+def _zero_idx(*idxs):
+    return tuple(np.zeros(i.shape, jax.dtypes.float0) for i in idxs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _packed_dense_diff(table, cache, idx, slot, interpret):
+    return packed_dense_pooled(table, cache, idx, slot, interpret=interpret)
+
+
+def _packed_dense_diff_fwd(table, cache, idx, slot, interpret):
+    out = _packed_dense_diff(table, cache, idx, slot, interpret)
+    return out, (table, cache, idx, slot)
+
+
+def _packed_dense_diff_bwd(interpret, res, ct):
+    table, cache, idx, slot = res
+    _, vjp = jax.vjp(
+        lambda t, c: ref.packed_bag_ref(t, c, idx, slot), table, cache
+    )
+    dt, dc = vjp(ct.astype(table.dtype))
+    return dt, dc, *_zero_idx(idx, slot)
+
+
+_packed_dense_diff.defvjp(_packed_dense_diff_fwd, _packed_dense_diff_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _packed_qr_diff(q, cache, r, q_idx, slot, r_idx, interpret):
+    return packed_qr_pooled(q, cache, r, q_idx, slot, r_idx, interpret=interpret)
+
+
+def _packed_qr_diff_fwd(q, cache, r, q_idx, slot, r_idx, interpret):
+    out = _packed_qr_diff(q, cache, r, q_idx, slot, r_idx, interpret)
+    return out, (q, cache, r, q_idx, slot, r_idx)
+
+
+def _packed_qr_diff_bwd(interpret, res, ct):
+    q, cache, r, q_idx, slot, r_idx = res
+    _, vjp = jax.vjp(
+        lambda a, c, b: ref.packed_qr_bag_ref(a, c, b, q_idx, slot, r_idx),
+        q, cache, r,
+    )
+    dq, dc, dr = vjp(ct.astype(q.dtype))
+    return dq, dc, dr, *_zero_idx(q_idx, slot, r_idx)
+
+
+_packed_qr_diff.defvjp(_packed_qr_diff_fwd, _packed_qr_diff_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9))
+def _packed_tt_diff(g1, g2, g3, cache, i1, i2, i3, slot, dims, interpret):
+    return packed_tt_pooled(
+        g1, g2, g3, cache, i1, i2, i3, slot, dims=dims, interpret=interpret
+    )
+
+
+def _packed_tt_diff_fwd(g1, g2, g3, cache, i1, i2, i3, slot, dims, interpret):
+    out = _packed_tt_diff(g1, g2, g3, cache, i1, i2, i3, slot, dims, interpret)
+    return out, (g1, g2, g3, cache, i1, i2, i3, slot)
+
+
+def _packed_tt_diff_bwd(dims, interpret, res, ct):
+    g1, g2, g3, cache, i1, i2, i3, slot = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, cc: ref.packed_tt_bag_ref(
+            a, b, c, cc, i1, i2, i3, slot, dims=dims
+        ),
+        g1, g2, g3, cache,
+    )
+    dg1, dg2, dg3, dc = vjp(ct.astype(g2.dtype))
+    return dg1, dg2, dg3, dc, *_zero_idx(i1, i2, i3, slot)
+
+
+_packed_tt_diff.defvjp(_packed_tt_diff_fwd, _packed_tt_diff_bwd)
+
+
+def packed_multi_pooled(
+    params: dict,
+    streams: dict,
+    *,
+    kind: str,
+    dims: tuple[int, int, int, int] | None = None,
+    exec_mode: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One megakernel dispatch for every table's pooled bag (differentiable).
+
+    ``params``: packed buffers — dense {"table", "cache"}, qr {"q", "cache",
+    "r"}, tt {"g1", "g2", "g3", "cache"}; ``streams``: globally-offset int32
+    index streams of shape (..., K) — dense {"idx", "slot"}, qr {"q_idx",
+    "slot", "r_idx"}, tt {"i1", "i2", "i3", "slot"}.  Built by
+    ``repro.core.packed_tables`` / ``repro.core.sharded_embedding``.
+
+    ``exec_mode="auto"`` runs the Pallas megakernel on TPU (or when
+    ``interpret=True`` is forced — tests); elsewhere the pure-jnp packed
+    oracle, so the same config trains and serves on every backend.
+    ``"kernel"`` always runs the kernel (interpret on CPU — the serving
+    driver's validation mode); ``"jnp"`` always the oracle.  The kernel path
+    carries a reference-recompute vjp, so all modes are training-safe.
+    """
+    use_kernel = {
+        "auto": bool(interpret) or jax.default_backend() == "tpu",
+        "kernel": True,
+        "jnp": False,
+    }[exec_mode]
+    if kind == "qr":
+        args = (params["q"], params["cache"], params["r"],
+                streams["q_idx"], streams["slot"], streams["r_idx"])
+        if use_kernel:
+            return _packed_qr_diff(*args, bool(interpret) or _interpret_default())
+        return ref.packed_qr_bag_ref(*args)
+    if kind == "tt":
+        args = (params["g1"], params["g2"], params["g3"], params["cache"],
+                streams["i1"], streams["i2"], streams["i3"], streams["slot"])
+        if use_kernel:
+            return _packed_tt_diff(
+                *args, dims, bool(interpret) or _interpret_default()
+            )
+        return ref.packed_tt_bag_ref(*args, dims=dims)
+    if kind == "dense":
+        args = (params["table"], params["cache"], streams["idx"], streams["slot"])
+        if use_kernel:
+            return _packed_dense_diff(*args, bool(interpret) or _interpret_default())
+        return ref.packed_bag_ref(*args)
+    raise ValueError(f"packed_multi_pooled: unsupported kind {kind!r}")
 
 
 def gnr_pooled_dense(

@@ -1,0 +1,219 @@
+"""Multi-table megakernel: packed-table fused gather-and-reduce.
+
+The serving and mesh paths used to launch one Pallas kernel per embedding
+table — a 26-table DLRM paid 26 dispatches plus 26 short HBM-streaming loops
+per batch.  ProactivePIM's bg-PIM wins by batching many small gathers into one
+wide memory-side pass (the RecNMP / TensorDIMM observation); the TPU analogue
+is a single kernel over a **packed** layout:
+
+* all same-width big subtables (dense tables / QR Q tables / TT middle cores)
+  are concatenated row-major into ONE buffer; per-table row offsets turn the
+  logical (table_id, row) pair into a flat packed row id **before** the kernel
+  — the index streams arriving here are already global;
+* bags from every table ride one flattened stream: grid step ``g`` is bag
+  ``(sample b, table t) = divmod(g, T)``; the kernel never sees table
+  boundaries, so HBM row DMAs pipeline *across* tables instead of draining
+  per-table loops back-to-back;
+* the small shared subtables of every table (QR R LUTs, TT outer cores) are
+  packed the same way and mapped into VMEM once — one resident block serves
+  all tables;
+* cache-slot routing (PR 3's prefetch scheduler) is folded in: ``slot >= 0``
+  reads the packed VMEM cache block (per-table slot ranges concatenated),
+  ``slot < 0`` streams the HBM row.  Hits pin the streamed operand to block 0
+  so Pallas elides their DMAs — runs of hits issue no HBM traffic;
+* accumulation is fp32 in a VMEM output block revisited across the K steps.
+
+The mesh path calls the same kernels with a 1-row dummy cache and an all-miss
+slot map: masking (non-owned rows, off-shard R positions, ragged bag tails)
+is expressed by routing those accesses to an appended all-zero row, so one
+kernel body covers cached serving, sharded partials, and ragged bags.
+
+Layout construction and index-stream packing live in
+``repro.core.packed_tables``; pure-jnp oracles in ``ref.py``
+(``packed_bag_ref`` / ``packed_qr_bag_ref`` / ``packed_tt_bag_ref``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import cached_gather as _cg
+
+# Budget for the VMEM-RESIDENT operands of one dispatch (packed cache block +
+# packed R LUT / TT outer cores; constant index maps keep them live across the
+# whole grid).  Layout builders must size slot budgets under this — see
+# DLRMConfig.cache_vmem_mb — so the guard failing means a mis-sized layout,
+# caught at trace time instead of as a Mosaic VMEM OOM.
+VMEM_RESIDENT_BUDGET = 12 * 2**20
+
+
+def _check_resident(**blocks) -> None:
+    total = sum(a.size * a.dtype.itemsize for a in blocks.values())
+    assert total <= VMEM_RESIDENT_BUDGET, (
+        f"VMEM-resident operands {total / 2**20:.1f} MiB exceed the "
+        f"{VMEM_RESIDENT_BUDGET / 2**20:.0f} MiB budget: "
+        + ", ".join(f"{k}={tuple(v.shape)}" for k, v in blocks.items())
+        + " — shrink the cache slot budget (cache_vmem_mb) or the packed LUTs"
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _packed_tt_kernel(
+    i1_ref, i2_ref, i3_ref, slot_ref,   # scalar-prefetched (G, K) streams
+    g2_row_ref,                          # (1, r*d2*r) streamed middle-core row
+    cache_ref,                           # (slots, r*d2*r) staged G2 rows (VMEM)
+    g1_ref,                              # (T*v1, d1*r) packed outer cores (VMEM)
+    g3_ref,                              # (T*v3, r*d3) packed outer cores (VMEM)
+    out_ref,                             # (1, d1*d2*d3) fp32 accumulator
+    *,
+    d1: int, d2: int, d3: int, rank: int,
+):
+    g, k = pl.program_id(0), pl.program_id(1)
+    s = slot_ref[g, k]
+    hit = s >= 0
+    cached = cache_ref[jnp.maximum(s, 0), :].astype(jnp.float32)
+    streamed = g2_row_ref[0, :].astype(jnp.float32)
+    m = jnp.where(hit, cached, streamed).reshape(rank, d2 * rank)
+    a = g1_ref[i1_ref[g, k], :].astype(jnp.float32).reshape(d1, rank)
+    t = jnp.dot(a, m, preferred_element_type=jnp.float32).reshape(d1 * d2, rank)
+    c = g3_ref[i3_ref[g, k], :].astype(jnp.float32).reshape(rank, d3)
+    row = jnp.dot(t, c, preferred_element_type=jnp.float32).reshape(1, d1 * d2 * d3)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + row
+
+
+# ---------------------------------------------------------------------------
+# megakernel dispatchers (one pallas_call for ALL tables)
+# ---------------------------------------------------------------------------
+
+def packed_bag(
+    table: jax.Array,
+    cache: jax.Array,
+    idx: jax.Array,
+    slot: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed dense megabag: out[g] = Σ_k (slot[g,k] >= 0 ? C[slot] : T[idx]).
+
+    table: (total_rows, dim) — ALL tables concatenated (+ trailing zero row);
+    cache: (total_slots, dim) packed staged block; idx/slot: (G, K) int32
+    with G = batch * num_tables and idx already globally offset.
+
+    The kernel body IS ``cached_gather.cached_bag``: the multi-table fusion
+    lives entirely in the pre-offset index stream and the packed buffers, so
+    the slot-routing/hit-pinning logic stays single-sourced.  This wrapper
+    adds the packed-layout VMEM-residency guard (the cache block here holds
+    EVERY table's slots).  Returns (G, dim) in the table dtype.
+    """
+    _check_resident(cache=cache)
+    return _cg.cached_bag(
+        table, cache, idx, slot, dim_block=dim_block, interpret=interpret
+    )
+
+
+def packed_qr_bag(
+    q_table: jax.Array,
+    cache: jax.Array,
+    r_lut: jax.Array,
+    q_idx: jax.Array,
+    slot: jax.Array,
+    r_idx: jax.Array,
+    *,
+    dim_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed QR megabag:
+    out[g] = Σ_k ( (slot >= 0 ? C[slot] : Q[q_idx]) + R[r_idx] ).
+
+    q_table: (total_q_rows, dim) all Q tables packed (+ zero row); r_lut:
+    (total_r_rows, dim) all R LUTs packed (+ zero row), VMEM-resident as one
+    block; q_idx/slot/r_idx: (G, K) globally-offset streams -> (G, dim).
+    Kernel body = ``cached_gather.cached_qr_bag`` over the packed buffers
+    (see ``packed_bag``), plus the packed-layout residency guard.
+    """
+    _check_resident(cache=cache, r_lut=r_lut)
+    return _cg.cached_qr_bag(
+        q_table, cache, r_lut, q_idx, slot, r_idx,
+        dim_block=dim_block, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "interpret"))
+def packed_tt_bag(
+    g1: jax.Array,
+    g2: jax.Array,
+    g3: jax.Array,
+    cache: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    i3: jax.Array,
+    slot: jax.Array,
+    *,
+    dims: tuple[int, int, int, int],
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed TT megabag with slot-routed middle core:
+    out[g] = Σ_k G1[i1] · (slot >= 0 ? C[slot] : G2[i2]) · G3[i3].
+
+    g1: (T*v1, d1*r) / g3: (T*v3, r*d3) — every table's outer cores packed and
+    VMEM-resident (the bg-PIM SRAM pin, now shared by the whole model);
+    g2: (total_v2_rows, r*d2*r) packed middle cores (+ zero row); cache:
+    (total_slots, r*d2*r) staged G2 rows.  i1/i2/i3/slot: (G, K) globally
+    offset.  ``dims`` = (d1, d2, d3, rank), static.  Returns (G, d1*d2*d3).
+    """
+    d1, d2, d3, rank = dims
+    gsz, k_steps = i1.shape
+    dim = d1 * d2 * d3
+    assert g1.shape[1] == d1 * rank, (g1.shape, dims)
+    assert g2.shape[1] == rank * d2 * rank, (g2.shape, dims)
+    assert g3.shape[1] == rank * d3, (g3.shape, dims)
+    assert cache.shape[1] == g2.shape[1], (cache.shape, g2.shape)
+    _check_resident(cache=cache, g1=g1, g3=g3)
+
+    grid = (gsz, k_steps)
+    kernel = pl.pallas_call(
+        functools.partial(_packed_tt_kernel, d1=d1, d2=d2, d3=d3, rank=rank),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                # Streamed G2 row: misses DMA i2's packed row, hits pin block 0.
+                pl.BlockSpec(
+                    (1, g2.shape[1]),
+                    lambda g, k, i1, i2, i3, sl: (
+                        jnp.where(sl[g, k] >= 0, 0, i2[g, k]), 0
+                    ),
+                ),
+                pl.BlockSpec(
+                    (cache.shape[0], cache.shape[1]),
+                    lambda g, k, i1, i2, i3, sl: (0, 0),
+                ),
+                pl.BlockSpec(g1.shape, lambda g, k, i1, i2, i3, sl: (0, 0)),
+                pl.BlockSpec(g3.shape, lambda g, k, i1, i2, i3, sl: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dim), lambda g, k, i1, i2, i3, sl: (g, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((gsz, dim), jnp.float32),
+        interpret=interpret,
+    )
+    out = kernel(
+        i1.astype(jnp.int32), i2.astype(jnp.int32), i3.astype(jnp.int32),
+        slot.astype(jnp.int32), g2, cache, g1, g3,
+    )
+    return out.astype(g2.dtype)

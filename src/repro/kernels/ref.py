@@ -99,6 +99,48 @@ def cached_qr_bag_ref(
     return rows.sum(axis=-2).astype(q_table.dtype)
 
 
+def packed_bag_ref(
+    table: jax.Array, cache: jax.Array, idx: jax.Array, slot: jax.Array
+) -> jax.Array:
+    """Packed dense megabag oracle — same math as ``cached_bag_ref``; the
+    multi-table packing lives entirely in the (already offset) index stream."""
+    return cached_bag_ref(table, cache, idx, slot)
+
+
+def packed_qr_bag_ref(
+    q_table: jax.Array, cache: jax.Array, r_lut: jax.Array,
+    q_idx: jax.Array, slot: jax.Array, r_idx: jax.Array,
+) -> jax.Array:
+    """Packed QR megabag oracle — ``cached_qr_bag_ref`` over packed buffers."""
+    return cached_qr_bag_ref(q_table, cache, r_lut, q_idx, slot, r_idx)
+
+
+def packed_tt_bag_ref(
+    g1: jax.Array, g2: jax.Array, g3: jax.Array, cache: jax.Array,
+    i1: jax.Array, i2: jax.Array, i3: jax.Array, slot: jax.Array,
+    *, dims: tuple[int, int, int, int],
+) -> jax.Array:
+    """Packed TT megabag oracle with slot-routed middle core:
+    out[g] = Σ_k G1[i1] · (slot >= 0 ? C[slot] : G2[i2]) · G3[i3].
+
+    Outer-core indices are global packed rows (t*v1 + i1); contraction and
+    accumulation in fp32 (kernel matches this).
+    """
+    d1, d2, d3, rank = dims
+    hit = (slot >= 0)[..., None]
+    g2_rows = jnp.where(
+        hit,
+        cache[jnp.maximum(slot, 0)].astype(jnp.float32),
+        g2[i2].astype(jnp.float32),
+    )
+    a = g1[i1].astype(jnp.float32).reshape(*i1.shape, d1, rank)
+    b = g2_rows.reshape(*i2.shape, rank, d2, rank)
+    c = g3[i3].astype(jnp.float32).reshape(*i3.shape, rank, d3)
+    rows = jnp.einsum("...ap,...pbq,...qc->...abc", a, b, c)
+    rows = rows.reshape(*i1.shape, d1 * d2 * d3)
+    return rows.sum(axis=-2).astype(g2.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Naive full-matrix attention oracle with GQA (fp32 softmax)."""
     b, h, sq, d = q.shape

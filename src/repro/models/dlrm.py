@@ -98,9 +98,19 @@ def init_dlrm(key, cfg: DLRMConfig):
 # ---------------------------------------------------------------------------
 
 def _gnr(tables, idx, bags, cfg: DLRMConfig):
-    """(B, T, pooling) indices -> (B, T, dim) pooled, two-level under a mesh."""
+    """(B, T, pooling) indices -> (B, T, dim) pooled, two-level under a mesh.
+
+    Packable bag sets (uniform dense/QR/TT — every DLRM config) run ONE
+    packed-table megakernel dispatch instead of a per-table loop, on both the
+    single-chip and the sharded path (``repro.core.packed_tables``).
+    """
+    from repro.core import packed_tables
+
+    use_packed = packed_tables.packable(bags)
     mesh = sharding.current_mesh()
     if mesh is None or "model" not in mesh.shape:
+        if use_packed:
+            return packed_tables.packed_multi_bag_lookup(tables, idx, bags)
         return embedding_bag.multi_bag_lookup(tables, idx, bags)
 
     from jax.sharding import PartitionSpec as P
@@ -113,6 +123,11 @@ def _gnr(tables, idx, bags, cfg: DLRMConfig):
     plans = [SE.ShardPlan(b.emb, nsh) for b in bags]
 
     def local_fn(tabs, indices):
+        if use_packed:
+            parts = SE.packed_local_partial(
+                tabs, indices, bags, plans, axis=row_axis
+            )
+            return jax.lax.psum(parts, row_axis)
         outs = []
         for t, (bag, plan) in enumerate(zip(bags, plans)):
             p = tabs[t]

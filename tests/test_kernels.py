@@ -79,6 +79,46 @@ def test_small_dim_fallback():
     )
 
 
+@pytest.mark.parametrize("dim", [96, 200])
+def test_non_128_dim_single_tile(dim):
+    """8-aligned dims NOT divisible by 128 run the kernel as one wide tile
+    (the explicit fallback): kernel == oracle, for lookup and pooled paths."""
+    q, r = _tables(64, 8, dim, jnp.float32)
+    key = jax.random.PRNGKey(7)
+    qi = jax.random.randint(key, (5, 6), 0, 64)
+    ri = jax.random.randint(key, (5, 6), 0, 8)
+    np.testing.assert_allclose(
+        np.asarray(ops.gnr_pooled(q, r, qi, ri)),
+        np.asarray(ref.gnr_bag_ref(q, r, qi, ri)), rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ops.qr_lookup(q, r, qi[:, 0], ri[:, 0])),
+        np.asarray(ref.qr_lookup_ref(q, r, qi[:, 0], ri[:, 0])), rtol=1e-5,
+    )
+
+
+def test_pick_dim_block_explicit_fallback_warns_once():
+    """The fallback ladder is explicit: 128-multiples are silent; 8-aligned
+    non-128 dims warn once (single tile); unaligned dims warn once (jnp
+    reference).  The warning fires exactly once per dim."""
+    import warnings
+
+    for d in (128, 256, 512, 640):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert ops._pick_dim_block(d) in (128, 256, 512)
+    ops._DIM_BLOCK_WARNED.discard(96)
+    ops._DIM_BLOCK_WARNED.discard(13)
+    with pytest.warns(UserWarning, match="single 96-wide tile"):
+        assert ops._pick_dim_block(96) == 96
+    with pytest.warns(UserWarning, match="pure-jnp reference"):
+        assert ops._pick_dim_block(13) is None
+    with warnings.catch_warnings():            # second call: no re-warn
+        warnings.simplefilter("error")
+        assert ops._pick_dim_block(96) == 96
+        assert ops._pick_dim_block(13) is None
+
+
 @given(
     n=st.integers(1, 64),
     q_rows=st.integers(1, 200),
