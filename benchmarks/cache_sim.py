@@ -18,12 +18,9 @@ the tracked acceptance number (>= 0.8).
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit
-from repro.cache import duplication, intra_gnr
+from repro.cache import intra_gnr
 from repro.cache.sram_cache import simulate
-from repro.core import placement
 from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
 from repro.data.synthetic import zipf_trace
@@ -107,17 +104,20 @@ def duplication_report(
     *, vocab=262_144, collision=64, pooling=32, num_tables=8, batch=1024,
     shards=8, n=60_000,
 ) -> None:
-    """Planner outcome at a generous and a starved budget."""
+    """Planner outcome at a generous and a starved budget (via engine.plan)."""
+    from repro import engine as engine_mod
+
     trace = zipf_trace(vocab, n, alpha=ALPHA, seed=9)
-    counts = placement.profile_counts(trace, vocab)
     for kind, kw in (("qr", {"collision": collision}), ("tt", {"tt_rank": 16})):
         emb = EmbeddingConfig(vocab=vocab, dim=128, kind=kind, **kw)
         bags = [BagConfig(emb=emb, pooling=pooling) for _ in range(num_tables)]
         for budget in (64 * 2**20, 256 * 2**10):
-            plan = duplication.plan_duplication(
-                bags, [counts] * num_tables,
-                num_shards=shards, budget_bytes=budget,
+            spec = engine_mod.EngineSpec.from_bags(
+                bags, duplication=True, dup_budget_bytes=budget,
             )
+            plan = engine_mod.plan(
+                spec, num_shards=shards, trace=[trace] * num_tables,
+            ).dup
             ici = plan.ici_bytes_per_batch(batch, emb.dim)
             emit(
                 f"cache_sim/dup_{kind}_budget{budget // 1024}K", 0.0,

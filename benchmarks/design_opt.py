@@ -28,7 +28,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _WORKER = r"""
 import time
 import jax, jax.numpy as jnp, numpy as np
-from repro.core import sharded_embedding as SE, embedding_bag as EB, qr_embedding as QE
+from repro import engine as E
+from repro.core import sharded_embedding as SE, qr_embedding as QE
 from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
 from repro.launch.mesh import make_mesh
@@ -42,6 +43,10 @@ params = QE.init(key, cfg)
 sp = SE.shard_qr_params(params, cfg, mesh)
 idx4 = jax.random.randint(key, (512, 4, 32), 0, cfg.vocab)
 
+# all four ladder rungs compile from the same engine front door
+eng4 = E.compile(E.plan(E.EngineSpec.from_bags(bags4), mesh=mesh))
+eng1 = E.compile(E.plan(E.EngineSpec.from_bags(bags4[:1]), mesh=mesh))
+
 def timeit(f, *a, it=4):
     jax.block_until_ready(f(*a))
     ts = []
@@ -51,18 +56,18 @@ def timeit(f, *a, it=4):
     return sorted(ts)[len(ts)//2] * 1e6
 
 # baseline: GSPMD auto-sharding of the naive double-gather
-base = SE.gspmd_baseline_gnr(mesh, bags4)
+base = eng4.baseline(mesh)
 t_base = timeit(base, [sp]*4, idx4)
 
 # + two-level (per-bag dispatch, R spread) — single-bag calls, no batching
-one = SE.build_multi_bag_gnr(mesh, bags4[:1])
+one = eng1.gnr(mesh)
 def per_bag(tabs, idx):
     outs = [one([tabs[t]], idx[:, t:t+1]) for t in range(4)]
     return jnp.concatenate(outs, axis=1)
 t_two = timeit(per_bag, [sp]*4, idx4)
 
 # + batching: all 4 bags in one fused dispatch
-four = SE.build_multi_bag_gnr(mesh, bags4)
+four = eng4.gnr(mesh)
 t_batch = timeit(four, [sp]*4, idx4)
 
 # + LUT: R replicated (already) AND Q hot tier replicated: serve hottest rows
@@ -80,7 +85,7 @@ hot, cold = placement.split_table(padded, placement.TierPlan(
     plan.hot_rows, slot, plan.hot_fraction, plan.expected_hot_hit))
 spc = SE.shard_qr_params({"q": cold, "r": params["r"]}, cfg, mesh)
 tier = {"hot_table": hot, "hot_slot": jnp.asarray(slot)}
-four_hot = SE.build_multi_bag_gnr(mesh, bags4, hot=True)
+four_hot = eng4.gnr(mesh, hot=True)
 t_lut = timeit(four_hot, [spc]*4, idx4, [tier]*4)
 
 print(f"RESULT {t_base:.1f} {t_two:.1f} {t_batch:.1f} {t_lut:.1f}")

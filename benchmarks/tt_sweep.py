@@ -77,15 +77,17 @@ def measured_kernel(vocab=65536, dim=128, rank=8, batch=256, pooling=16) -> None
         p["g1"], p["g2"], p["g3"], a, b, c, dims=dims
     )
     t_kernel = time_jit(f_kernel, params, i1, i2, i3)
-    # jnp module-level bag (what the model path runs on CPU)
-    bag = BagConfig(emb=cfg, pooling=pooling)
-    from repro.core.embedding_bag import bag_lookup
+    # engine front-door bag (what the model path runs): one-table GnR via
+    # the packed megakernel dispatch (jnp oracle on CPU)
+    from repro import engine as engine_mod
 
-    f_mod = jax.jit(lambda p, i: bag_lookup(p, i, bag))
+    bag = BagConfig(emb=cfg, pooling=pooling)
+    eng = engine_mod.engine_for(engine_mod.EngineSpec.from_bags((bag,)))
+    f_mod = jax.jit(lambda p, i: eng.lookup([p], i[:, None, :])[:, 0])
     t_mod = time_jit(f_mod, params, idx)
 
     emit("tt_sweep/measured_ref_bag", t_ref, f"batch={batch} pooling={pooling} rank={rank}")
-    emit("tt_sweep/measured_module_bag", t_mod, f"vs_ref={t_ref / t_mod:.2f}x")
+    emit("tt_sweep/measured_engine_bag", t_mod, f"vs_ref={t_ref / t_mod:.2f}x")
     emit(
         "tt_sweep/measured_pallas_bag", t_kernel,
         "interpret-mode on CPU: parity target, not a speed target",

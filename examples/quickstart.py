@@ -41,7 +41,16 @@ def main() -> None:
     np.testing.assert_allclose(naive, kernel, rtol=1e-4, atol=1e-4)
     print("naive == fused == pallas-LUT lookup: OK")
 
-    # --- 3. a small LM whose vocab table is the QR operator ----------------
+    # --- 3. the engine front door: declare -> plan -> compile -> execute ---
+    from repro import engine as engine_mod
+
+    spec = engine_mod.EngineSpec.from_bags([bag])       # tables + policies
+    eng = engine_mod.compile(engine_mod.plan(spec))     # offline pass, once
+    pooled = eng.lookup([params], idx[:, None, :])[:, 0]
+    np.testing.assert_allclose(naive, pooled, rtol=1e-4, atol=1e-4)
+    print(f"engine lookup == naive: OK  (plan: {eng.summary()})")
+
+    # --- 4. a small LM whose vocab table is the QR operator ----------------
     binding = registry.get("qwen2-1.5b")
     lm_cfg = binding.smoke.replace(embedding_kind="qr", qr_collision=8)
     lm_params, _ = registry.init_fn(binding)(jax.random.PRNGKey(2), lm_cfg)

@@ -9,14 +9,14 @@ Public surface:
 * ``tt_embedding``       — TT-Rec tensor-train tables (3-core factorization)
 * ``packed_tables``      — packed multi-table layout feeding the megakernel
   (one buffer / one index stream / one dispatch for every table's bag)
-* ``sharded_embedding``  — two-level shard_map GnR (the PIM scheme on a mesh)
-  plus the cached serving path (``cached_bag_lookup``, duplication-plan-aware
-  ``build_dup_multi_bag_gnr``) — packable bag sets run the packed megakernel
-  partials (``packed_local_partial``)
+* ``sharded_embedding``  — two-level shard_map partials (the PIM scheme on a
+  mesh): the kernel-level pieces ``repro.engine`` composes.  The legacy
+  ``build_*`` / ``cached_bag_lookup`` builders here are deprecated shims.
 * ``overlap``            — compute/ICI overlap helpers
 
 The ProactivePIM cache subsystem (intra-GnR analyzer, prefetch scheduler,
-duplication planner) lives in ``repro.cache``.
+duplication planner) lives in ``repro.cache``; the plan/compile/execute
+front door every GnR path routes through lives in ``repro.engine``.
 """
 
 from repro.core import (  # noqa: F401

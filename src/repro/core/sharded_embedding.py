@@ -16,13 +16,16 @@ Mapping (see DESIGN.md §2):
 Associativity of the ``add`` reconstruction is what legalizes all of this —
 exactly the paper's argument for why Q rows and R rows may live anywhere.
 
-All ``*_partial`` functions run **inside** ``shard_map`` and take local shards;
-``build_*`` helpers wrap them into jitted global-array callables.
+All ``*_partial`` functions run **inside** ``shard_map`` and take local shards.
+They are the kernel-level pieces the engine (``repro.engine``) composes; the
+legacy ``build_*`` / ``cached_bag_lookup`` / ``gspmd_baseline_gnr`` builders
+are deprecated shims that delegate to the engine's plan/compile/execute API.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import jax
@@ -389,8 +392,24 @@ def packed_local_partial(
 
 
 # ---------------------------------------------------------------------------
-# cached serving path (ProactivePIM cache subsystem)
+# deprecated builder shims — the engine (repro.engine) is the front door now.
+# Each emits a one-time DeprecationWarning and delegates; result parity with
+# the engine entries is asserted by tests/test_engine.py.
 # ---------------------------------------------------------------------------
+
+_DEPRECATED_WARNED: set[str] = set()
+
+
+def _warn_deprecated(name: str, replacement: str) -> None:
+    if name not in _DEPRECATED_WARNED:
+        _DEPRECATED_WARNED.add(name)
+        warnings.warn(
+            f"repro.core.sharded_embedding.{name} is deprecated; route through "
+            f"the engine API instead: {replacement}",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
 
 def cached_bag_lookup(
     params: dict,
@@ -401,50 +420,17 @@ def cached_bag_lookup(
     slot: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Single-chip cached GnR for one table — the recommendation serving path.
+    """DEPRECATED: use ``EmbeddingEngine.cached_lookup`` (repro.engine)."""
+    _warn_deprecated(
+        "cached_bag_lookup",
+        "engine_for(EngineSpec.from_bags([bag])).cached_lookup(...)",
+    )
+    from repro import engine as _engine
 
-    Consumes the prefetch scheduler's staged state
-    (``repro.cache.sram_cache.PrefetchScheduler``): ``cache_rows`` (slots,)
-    names the big-table rows resident in the cache block this batch,
-    ``slot`` (..., pooling) routes each access (-1 = miss).  The cache-block
-    gather ``big_table[cache_rows]`` *is* the staging DMA — it happens once
-    per batch, overlapped (on hardware) with the previous batch.
-
-    QR/dense route through the ``cached_gather`` Pallas kernel (hits to the
-    VMEM cache block, misses streamed); TT routes through the fused TT bag
-    kernel, whose VMEM-pinned outer cores already realize the duplicated
-    subtables — the scheduler's slot state then only models G2-row reuse.
-    """
-    from repro.kernels import ops
-
-    emb = bag.emb
-    if emb.kind == "qr":
-        q_idx, r_idx = hashing.qr_decompose(idx, emb.collision)
-        cache = params["q"][cache_rows]
-        out = ops.cached_qr_pooled(
-            params["q"], cache, params["r"], q_idx, slot, r_idx, interpret=interpret
-        )
-    elif emb.kind == "tt":
-        from repro.core import tt_embedding
-
-        spec = emb.tt_spec
-        i1, i2, i3 = tt_embedding.tt_decompose(idx, spec)
-        out = ops.tt_pooled_auto(
-            params["g1"], params["g2"], params["g3"], i1, i2, i3,
-            dims=(spec.d1, spec.d2, spec.d3, spec.rank),
-            exec_mode=emb.tt_exec, interpret=interpret,
-        )
-    elif emb.kind == "hashed":
-        # k-ary expansion doesn't fit the single-row slot map; serve uncached
-        from repro.core import embedding_bag
-
-        return embedding_bag.bag_lookup(params, idx, bag)
-    else:
-        cache = params["table"][cache_rows]
-        out = ops.cached_pooled(params["table"], cache, idx, slot, interpret=interpret)
-    if bag.combiner == "mean":
-        out = out / jnp.asarray(bag.pooling, out.dtype)
-    return out
+    eng = _engine.engine_for(_engine.EngineSpec.from_bags((bag,)))
+    return eng.cached_lookup(
+        params, idx, 0, cache_rows=cache_rows, slot=slot, interpret=interpret
+    )
 
 
 def make_dup_hot_tiers(tables: Sequence[dict], bags: Sequence[BagConfig], dup_plan):
@@ -479,109 +465,24 @@ def build_dup_multi_bag_gnr(
     batch_axis: str = "data",
     row_axis: str = "model",
 ):
-    """Duplication-plan-aware GnR: the paper's communication elimination.
+    """DEPRECATED: use ``EmbeddingEngine.gnr`` with a duplication-carrying
+    plan (``engine.plan(spec, mesh, dup=dup_plan)``).
 
-    Tables whose subtables are fully replicated under the plan's budget
-    (``TableDupPlan.comm_free``) are served entirely from local replicas —
-    they never enter the psum, the ICI analogue of ProactivePIM killing the
-    CPU–PIM transfer by duplicating subtables across bank groups.  The
-    remaining tables run the usual two-level partial-GnR with the plan's hot
-    tier, combined by one pooled psum.
-
-    Returned fn: fn(tables, indices (B, T, pooling), hot_tiers) -> (B, T, dim)
-    where ``hot_tiers`` comes from ``make_dup_hot_tiers``.
+    Returned fn keeps the legacy signature:
+    fn(tables, indices (B, T, pooling), hot_tiers) -> (B, T, dim).
     """
-    from repro.core import embedding_bag, packed_tables
-
-    nsh = mesh.shape[row_axis]
-    plans = [ShardPlan(b.emb, nsh) for b in bags]
-    tplans = dup_plan.tables
-    use_packed = packed_tables.packable(bags)
-    cf = [tp.comm_free for tp in tplans]
-    psum_cols = [t for t, c in enumerate(cf) if not c]
-
-    def local_fn(tables, indices, hot_tiers):
-        if use_packed:
-            # one megakernel dispatch for all tables; only the non-comm-free
-            # columns ride the pooled psum (the paper's communication kill)
-            parts = packed_local_partial(
-                tables, indices, bags, plans, axis=row_axis,
-                hot_tiers=hot_tiers, comm_free=cf,
-            )
-            if psum_cols:
-                combined = jax.lax.psum(parts[:, psum_cols], row_axis)
-                parts = parts.at[:, psum_cols].set(combined)
-            return parts
-        outs: list[jax.Array] = []
-        needs_psum: list[bool] = []
-        for t, (bag, plan, tp) in enumerate(zip(bags, plans, tplans)):
-            idx = indices[:, t]
-            params = tables[t]
-            if tp.comm_free:
-                # replicated everywhere -> full local lookup, no combine
-                part = embedding_bag.bag_lookup(params, idx, bag)
-                outs.append(part)
-                needs_psum.append(False)
-                continue
-            tier = hot_tiers[t]
-            if bag.emb.kind == "qr":
-                part = qr_bag_partial(
-                    params["q"], params["r"], idx, plan, axis=row_axis,
-                    hot_table=tier["hot_table"], hot_slot=tier["hot_slot"],
-                )
-            elif bag.emb.kind == "tt":
-                part = tt_bag_partial(
-                    params["g1"], params["g2"], params["g3"], idx, plan,
-                    axis=row_axis,
-                    hot_table=tier["hot_table"], hot_slot=tier["hot_slot"],
-                )
-            else:
-                part = dense_bag_partial(params["table"], idx, plan, axis=row_axis)
-            if bag.combiner == "mean":
-                part = part / jnp.asarray(bag.pooling, part.dtype)
-            outs.append(part)
-            needs_psum.append(True)
-        if any(needs_psum):
-            combined = jax.lax.psum(
-                jnp.stack([o for o, n in zip(outs, needs_psum) if n], axis=1),
-                row_axis,
-            )
-        res, si = [], 0
-        for o, n in zip(outs, needs_psum):
-            if n:
-                res.append(combined[:, si])
-                si += 1
-            else:
-                res.append(o)
-        return jnp.stack(res, axis=1)
-
-    def table_specs(bag, tp):
-        if tp.comm_free:
-            keys = {"qr": ("q", "r"), "tt": ("g1", "g2", "g3")}.get(
-                bag.emb.kind, ("table",)
-            )
-            return {k: P() for k in keys}
-        if bag.emb.kind == "qr":
-            return {"q": P(row_axis, None), "r": P()}
-        if bag.emb.kind == "tt":
-            return {"g1": P(), "g2": P(row_axis, None), "g3": P()}
-        return {"table": P(row_axis, None)}
-
-    in_specs = (
-        [table_specs(b, tp) for b, tp in zip(bags, tplans)],
-        P(batch_axis, None, None),
-        [{"hot_table": P(), "hot_slot": P()} for _ in bags],
+    _warn_deprecated(
+        "build_dup_multi_bag_gnr",
+        "compile(plan(EngineSpec.from_bags(bags, duplication=True), mesh, "
+        "dup=dup_plan)).gnr(mesh)",
     )
-    out_specs = P(batch_axis, None, None)
+    from repro import engine as _engine
 
-    @jax.jit
-    def fn(tables, indices, hot_tiers):
-        return jax_compat.shard_map(
-            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )(tables, indices, hot_tiers)
-
-    return fn
+    spec = _engine.EngineSpec.from_bags(
+        bags, duplication=True, batch_axis=batch_axis, row_axis=row_axis
+    )
+    eng = _engine.compile(_engine.plan(spec, mesh=mesh, dup=dup_plan))
+    return eng.gnr(mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -620,76 +521,23 @@ def build_multi_bag_gnr(
     row_axis: str = "model",
     hot: bool = False,
 ):
-    """Jitted global GnR over all tables: the end-to-end two-level scheme.
+    """DEPRECATED: use ``EmbeddingEngine.gnr`` (repro.engine).
 
-    Signature of the returned fn:
+    Returned fn keeps the legacy signature:
         fn(tables: list[dict], indices: (B, T, pooling) int32,
            hot_tiers: list[dict] | None) -> (B, T, dim)
-
-    ``tables[t]`` holds padded ``q``(+``r``) or ``table``; ``hot_tiers[t]`` holds
-    ``hot_table`` + ``hot_slot`` when the tier plan replicates rows.
     """
-    from repro.core import packed_tables
-
-    nsh = mesh.shape[row_axis]
-    plans = [ShardPlan(b.emb, nsh) for b in bags]
-    use_packed = packed_tables.packable(bags)
-
-    def local_fn(tables, indices, hot_tiers):
-        if use_packed:
-            parts = packed_local_partial(
-                tables, indices, bags, plans, axis=row_axis,
-                hot_tiers=hot_tiers,
-            )
-            return jax.lax.psum(parts, row_axis)     # base-die combine
-        outs = []
-        for t, (bag, plan) in enumerate(zip(bags, plans)):
-            idx = indices[:, t]
-            params = tables[t]
-            tier = None if hot_tiers is None else hot_tiers[t]
-            if bag.emb.kind == "qr":
-                part = qr_bag_partial(
-                    params["q"], params["r"], idx, plan, axis=row_axis,
-                    hot_table=None if tier is None else tier["hot_table"],
-                    hot_slot=None if tier is None else tier["hot_slot"],
-                )
-            elif bag.emb.kind == "tt":
-                part = tt_bag_partial(
-                    params["g1"], params["g2"], params["g3"], idx, plan,
-                    axis=row_axis,
-                    hot_table=None if tier is None else tier["hot_table"],
-                    hot_slot=None if tier is None else tier["hot_slot"],
-                )
-            else:
-                part = dense_bag_partial(params["table"], idx, plan, axis=row_axis)
-            if bag.combiner == "mean":
-                part = part / jnp.asarray(bag.pooling, part.dtype)
-            outs.append(part)
-        stacked = jnp.stack(outs, axis=1)                     # (B_local, T, dim)
-        return jax.lax.psum(stacked, row_axis)                # base-die combine
-
-    def table_specs(bag):
-        if bag.emb.kind == "qr":
-            return {"q": P(row_axis, None), "r": P()}
-        if bag.emb.kind == "tt":
-            return {"g1": P(), "g2": P(row_axis, None), "g3": P()}
-        return {"table": P(row_axis, None)}
-
-    in_specs = (
-        [table_specs(b) for b in bags],
-        P(batch_axis, None, None),
-        None if not hot else [{"hot_table": P(), "hot_slot": P()} for _ in bags],
+    _warn_deprecated(
+        "build_multi_bag_gnr",
+        "compile(plan(EngineSpec.from_bags(bags), mesh)).gnr(mesh, hot=hot)",
     )
-    out_specs = P(batch_axis, None, None)
+    from repro import engine as _engine
 
-    @jax.jit
-    def fn(tables, indices, hot_tiers=None):
-        return jax_compat.shard_map(
-            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )(tables, indices, hot_tiers)
-
-    return fn
+    spec = _engine.EngineSpec.from_bags(
+        bags, batch_axis=batch_axis, row_axis=row_axis
+    )
+    eng = _engine.compile(_engine.plan(spec, mesh=mesh))
+    return eng.gnr(mesh, hot=hot)
 
 
 def build_token_embed(
@@ -738,29 +586,18 @@ def build_token_embed(
 
 def gspmd_baseline_gnr(mesh: Mesh, bags: Sequence[BagConfig], *, batch_axis="data",
                        row_axis="model"):
-    """The no-technique baseline: plain gathers under GSPMD auto-sharding.
+    """DEPRECATED: use ``EmbeddingEngine.baseline`` (repro.engine)."""
+    _warn_deprecated(
+        "gspmd_baseline_gnr",
+        "compile(plan(EngineSpec.from_bags(bags), mesh)).baseline(mesh)",
+    )
+    from repro import engine as _engine
 
-    XLA materializes all-gathers of table rows; benchmarks diff its collective
-    bytes against the two-level scheme to reproduce the paper's headline win.
-    """
-    from repro.core import embedding_bag
-
-    def fn(tables, indices):
-        tables = [
-            {
-                k: jax.lax.with_sharding_constraint(
-                    v, NamedSharding(mesh, P(row_axis, None))
-                )
-                for k, v in t.items()
-            }
-            for t in tables
-        ]
-        indices = jax.lax.with_sharding_constraint(
-            indices, NamedSharding(mesh, P(batch_axis, None, None))
-        )
-        return embedding_bag.multi_bag_lookup(tables, indices, bags)
-
-    return jax.jit(fn)
+    spec = _engine.EngineSpec.from_bags(
+        bags, batch_axis=batch_axis, row_axis=row_axis
+    )
+    eng = _engine.compile(_engine.plan(spec, mesh=mesh))
+    return eng.baseline(mesh)
 
 
 def token_embed_inline(params: dict, idx: jax.Array, cfg: EmbeddingConfig,

@@ -1,0 +1,35 @@
+"""repro.engine — one plan/compile/execute front door for every GnR path.
+
+The paper's pipeline is a single logical flow — analyze locality, plan
+prefetch/duplication/placement, then execute gather-and-reduce — and this
+package is that flow as an API (the RecNMP/TensorDIMM request->schedule->
+execute framing):
+
+1. **declare**: ``EngineSpec`` — tables + bags + policies (compression kind,
+   cache/slot policy, duplication, sharding axes, packing, exec backend);
+2. **plan**: ``plan(spec, mesh?, trace?)`` runs the intra-GnR analyzer, the
+   cache-slot waterfill, the duplication planner, and the packed-layout
+   construction once, returning a hashable ``EmbeddingPlan``;
+3. **execute**: ``compile(plan)`` returns an ``EmbeddingEngine`` whose
+   ``lookup`` / ``forward_partial`` / ``gnr`` / ``inline_gnr`` /
+   ``cached_lookup`` + ``serve_gather`` entries dispatch internally to the
+   packed megakernel, cached, per-table, or jnp-oracle backends with
+   automatic fallback (CPU hosts, non-packable bag sets).
+
+Every first-party caller (``models/dlrm``, ``launch/serve_rec``,
+``launch/train``, the benchmarks, the examples) routes through this seam;
+the legacy ``sharded_embedding`` builders are deprecated shims over it.
+
+    spec   = EngineSpec.from_dlrm(cfg, serving=True)
+    eplan  = engine.plan(spec, num_shards=4, trace=traces)
+    eng    = engine.compile(eplan)
+    pooled = eng.lookup(tables, idx)          # or gnr(mesh) / serve_gather
+"""
+
+from repro.engine.engine import (           # noqa: F401
+    EmbeddingEngine, compile, engine_for,
+)
+from repro.engine.plan import (             # noqa: F401
+    EmbeddingPlan, big_rows, big_subtable, plan,
+)
+from repro.engine.spec import EngineSpec    # noqa: F401

@@ -1,0 +1,225 @@
+"""plan() — the offline half of the engine: analyze, budget, place, pack.
+
+``plan(spec, mesh?, trace?)`` runs the paper's whole offline pipeline once —
+the intra-GnR locality analyzer, the cache-slot waterfill, the
+replicate-vs-shard duplication planner, and the packed-layout construction —
+and freezes the result into an ``EmbeddingPlan``.  The plan is **hashable**
+(numpy payloads are excluded from eq/hash), so it is safe as a jit static
+argument: the serving dispatch is one module-level jit keyed by the plan.
+
+Everything here is host-side and runs once per (spec, trace); execution state
+(packed buffers, schedulers) is built later by ``compile``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.cache import duplication, intra_gnr
+from repro.cache.sram_cache import PrefetchScheduler
+from repro.core import packed_tables, placement
+from repro.engine.spec import EngineSpec
+
+
+def big_subtable(emb) -> tuple[str, int]:
+    """(name, rows) of the streamed/tiered big subtable the cache covers."""
+    if emb.kind == "qr":
+        return "q", emb.qr_spec.q_rows
+    if emb.kind == "tt":
+        return "g2", emb.tt_spec.v2
+    rows = emb.physical_hashed_rows if emb.kind == "hashed" else emb.vocab
+    return "table", rows
+
+
+def big_rows(idx: np.ndarray, emb) -> np.ndarray:
+    """Map a logical-index batch (bags, pooling) onto big-subtable rows (the
+    cached stream), via the analyzer's single-sourced decomposition."""
+    name, _rows = big_subtable(emb)
+    trace, _r, _b = intra_gnr.subtable_traces(idx, emb)[name]
+    return trace
+
+
+def _bag_shaped(trace: np.ndarray, pooling: int) -> np.ndarray:
+    """Normalize a per-table trace to (bags, pooling) logical indices."""
+    trace = np.asarray(trace)
+    if trace.ndim == 2:
+        return trace
+    n = trace.size - trace.size % pooling
+    return trace[:n].reshape(-1, pooling)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingPlan:
+    """Frozen output of the offline pass — the engine's compilation unit.
+
+    Eq/hash cover only the static execution-relevant fields (``spec``,
+    ``num_shards``, ``backend``, ``layout``, ``slot_budgets``); the numpy
+    planning payloads (duplication plan, prefetch values, locality stats) are
+    carried ``compare=False`` so the plan stays usable as a jit static arg.
+    """
+
+    spec: EngineSpec
+    num_shards: int
+    backend: str                                  # packed | pertable
+    layout: packed_tables.PackedLayout | None
+    slot_budgets: tuple[int, ...]
+    # planning payloads (host numpy; excluded from eq/hash)
+    dup: duplication.DuplicationPlan | None = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+    values: tuple = dataclasses.field(default=(), compare=False, repr=False)
+    locality: tuple = dataclasses.field(default=(), compare=False, repr=False)
+
+    @property
+    def bags(self):
+        return self.spec.bags
+
+    @property
+    def kind(self) -> str:
+        return self.spec.kind
+
+    @property
+    def packed(self) -> bool:
+        return self.backend == "packed"
+
+    @property
+    def has_cache(self) -> bool:
+        return sum(self.slot_budgets) > 0
+
+    @property
+    def comm_free(self) -> tuple[bool, ...]:
+        """Per-table: True when the duplication planner killed the combine."""
+        if self.dup is None:
+            return tuple(False for _ in self.bags)
+        return tuple(t.comm_free for t in self.dup.tables)
+
+    def fresh_schedulers(self) -> list[PrefetchScheduler]:
+        """One prefetch scheduler per table (stateful — fresh per session)."""
+        if not self.has_cache:
+            raise ValueError("plan has no cache slots; set spec.cache_slots")
+        scheds = []
+        for t, bag in enumerate(self.bags):
+            _name, rows = big_subtable(bag.emb)
+            value = self.values[t] if self.values else None
+            scheds.append(PrefetchScheduler(rows, self.slot_budgets[t], value))
+        return scheds
+
+    def summary(self) -> dict:
+        """JSON-serializable description (the CI plan artifact)."""
+        out = {
+            "kind": self.kind,
+            "num_tables": self.spec.num_tables,
+            "backend": self.backend,
+            "exec_backend": self.spec.exec_backend,
+            "num_shards": self.num_shards,
+            "slot_budgets": list(self.slot_budgets),
+            "total_slots": int(sum(self.slot_budgets)),
+            "packed_rows": self.layout.total_rows if self.layout else 0,
+            "comm_free": list(self.comm_free),
+        }
+        if self.dup is not None:
+            out["replicated_bytes_per_chip"] = int(self.dup.replicated_bytes)
+            out["dup_budget_bytes"] = int(self.dup.budget_bytes)
+        if self.locality:
+            big = big_subtable(self.bags[0].emb)[0]
+            out["mean_intra_reuse_big"] = [
+                round(float(loc[big].mean_intra_reuse), 4) for loc in self.locality
+            ]
+        return out
+
+
+def _slot_budgets(
+    spec: EngineSpec, values: list[np.ndarray] | None
+) -> tuple[int, ...]:
+    """Per-table cache-slot budgets under the spec's policy + VMEM ceiling."""
+    num_t = spec.num_tables
+    if spec.cache_slots <= 0:
+        return tuple(0 for _ in range(num_t))
+    emb = spec.bags[0].emb
+    width = emb.tt_spec.g2_width if emb.kind == "tt" else emb.dim
+    row_bytes = width * np.dtype(emb.param_dtype).itemsize
+    vmem_slots = (spec.cache_vmem_mb * 2**20) // max(1, row_bytes)
+    total = min(spec.cache_slots * num_t, vmem_slots)
+    if spec.cache_slot_policy == "adaptive" and values is not None:
+        budgets = intra_gnr.split_slot_budget(values, total)
+    else:
+        budgets = [min(spec.cache_slots, total // num_t)] * num_t
+    rows = [big_subtable(b.emb)[1] for b in spec.bags]
+    return tuple(max(1, min(b, r)) for b, r in zip(budgets, rows))
+
+
+def plan(
+    spec: EngineSpec,
+    mesh=None,
+    trace: Sequence[np.ndarray] | None = None,
+    *,
+    num_shards: int | None = None,
+    dup: duplication.DuplicationPlan | None = None,
+) -> EmbeddingPlan:
+    """Run the offline pipeline once: analyze -> budget -> duplicate -> pack.
+
+    ``mesh`` (or ``num_shards``) sizes the row-shard axis the duplication
+    planner models; ``trace`` is one logical-index trace per table — flat
+    ``(N,)`` or bag-shaped ``(bags, pooling)`` — feeding the analyzer.  A
+    pre-built ``dup`` plan may be adopted instead of re-planning (the
+    deprecation shims use this).  Without a trace, cache budgets fall back to
+    the uniform policy and no duplication plan is built.
+    """
+    bags = spec.bags
+    if num_shards is None:
+        num_shards = 1
+        if mesh is not None and spec.row_axis in mesh.shape:
+            num_shards = mesh.shape[spec.row_axis]
+
+    locs: list[dict] = []
+    values: list[np.ndarray] | None = None
+    counts: list[np.ndarray] | None = None
+    if trace is not None:
+        if len(trace) != len(bags):
+            raise ValueError(f"need one trace per table: {len(trace)} vs {len(bags)}")
+        values, counts = [], []
+        big = big_subtable(bags[0].emb)[0]
+        for bag, tr in zip(bags, trace):
+            shaped = _bag_shaped(tr, bag.pooling)
+            loc = intra_gnr.analyze_table(shaped, bag.emb)
+            locs.append(loc)
+            values.append(loc[big].prefetch_value().astype(np.float64))
+            counts.append(
+                placement.profile_counts(shaped.reshape(-1), bag.emb.vocab)
+            )
+
+    budgets = _slot_budgets(spec, values)
+
+    if dup is None and spec.duplication:
+        if counts is None:
+            raise ValueError(
+                "spec.duplication=True needs an access profile: pass trace= "
+                "(one per table) or adopt a pre-built plan via dup="
+            )
+        budget_bytes = (
+            spec.dup_budget_bytes if spec.dup_budget_bytes is not None
+            else spec.dup_budget_mb * 2**20
+        )
+        dup = duplication.plan_duplication(
+            list(bags), counts,
+            num_shards=num_shards,
+            budget_bytes=budget_bytes,
+            slot_budgets=list(budgets),
+        )
+
+    packed = spec.packing == "auto" and packed_tables.packable(bags)
+    layout = packed_tables.build_layout(bags, budgets) if packed else None
+
+    return EmbeddingPlan(
+        spec=spec,
+        num_shards=num_shards,
+        backend="packed" if packed else "pertable",
+        layout=layout,
+        slot_budgets=budgets,
+        dup=dup,
+        values=tuple(values) if values is not None else (),
+        locality=tuple(locs),
+    )

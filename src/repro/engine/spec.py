@@ -1,0 +1,107 @@
+"""EngineSpec — the declarative request half of the plan/compile/execute API.
+
+One frozen, hashable dataclass names everything the paper's pipeline needs to
+know about an embedding layer *before* any planning runs: the tables + bags
+(compression kind rides on each ``BagConfig``), the cache/slot policy, the
+duplication budget, the sharding axes, the packing policy, and the kernel
+backend.  ``repro.engine.plan`` consumes a spec (plus an optional mesh and
+trace) and returns an ``EmbeddingPlan``; ``repro.engine.compile`` turns the
+plan into an executable ``EmbeddingEngine``.
+
+Hashability is load-bearing: specs key the module-level engine cache (so a
+model forward can resolve its engine at trace time for free) and plans key
+the jit cache of the serving dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.embedding_bag import BagConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Declarative description of one embedding layer for the engine.
+
+    Policies (all static):
+
+    * ``cache_slots`` / ``cache_slot_policy`` / ``cache_vmem_mb`` — the
+      prefetch-cache budget.  ``cache_slots`` is a per-table allowance whose
+      ``num_tables``-fold total is either waterfilled across tables by the
+      intra-GnR analyzer's prefetch value (``"adaptive"``) or split uniformly
+      (``"uniform"``); the packed cache block is clamped to
+      ``cache_vmem_mb`` (the bg-PIM SRAM size class).  0 slots = no cache.
+    * ``duplication`` / ``dup_budget_mb`` — run the replicate-vs-shard
+      planner under a per-chip byte budget (the paper's communication kill).
+    * ``packing`` — ``"auto"`` packs uniform bag sets into the multi-table
+      megakernel layout, ``"off"`` forces the per-table loop.
+    * ``exec_backend`` — ``"auto"`` (Pallas kernels on TPU, jnp oracles
+      elsewhere), ``"kernel"`` (always the kernel — interpret mode on CPU),
+      ``"jnp"`` (always the oracle).
+    * ``batch_axis`` / ``row_axis`` — mesh axis names of the two-level
+      scheme (requests over ``batch_axis``, table rows over ``row_axis``).
+    """
+
+    bags: tuple[BagConfig, ...]
+    # prefetch-cache policy
+    cache_slots: int = 0
+    cache_slot_policy: str = "adaptive"     # adaptive | uniform
+    cache_vmem_mb: int = 8
+    # duplication policy
+    duplication: bool = False
+    dup_budget_mb: int = 64
+    dup_budget_bytes: int | None = None     # byte-granular override of the MB knob
+    # execution policy
+    packing: str = "auto"                   # auto | off
+    exec_backend: str = "auto"              # auto | kernel | jnp
+    batch_axis: str = "data"
+    row_axis: str = "model"
+
+    def __post_init__(self):
+        if not self.bags:
+            raise ValueError("EngineSpec needs at least one bag")
+        if self.packing not in ("auto", "off"):
+            raise ValueError(f"unknown packing policy {self.packing!r}")
+        if self.exec_backend not in ("auto", "kernel", "jnp"):
+            raise ValueError(f"unknown exec backend {self.exec_backend!r}")
+        if self.cache_slot_policy not in ("adaptive", "uniform"):
+            raise ValueError(f"unknown slot policy {self.cache_slot_policy!r}")
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.bags)
+
+    @property
+    def kind(self) -> str:
+        return self.bags[0].emb.kind
+
+    def replace(self, **kw) -> "EngineSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def from_bags(cls, bags: Sequence[BagConfig], **kw) -> "EngineSpec":
+        return cls(bags=tuple(bags), **kw)
+
+    @classmethod
+    def from_dlrm(cls, cfg, *, serving: bool = False, **kw) -> "EngineSpec":
+        """Spec for a ``DLRMConfig``.  ``serving=True`` turns on the config's
+        cache + duplication policies (the offline pass); the training/forward
+        spec leaves them off — the model forward needs no plan state."""
+        from repro.models import dlrm
+
+        bags = tuple(dlrm.make_bags(cfg))
+        if serving:
+            kw.setdefault("cache_slots", cfg.cache_slots)
+            kw.setdefault("cache_slot_policy",
+                          getattr(cfg, "cache_slot_policy", "adaptive"))
+            kw.setdefault("cache_vmem_mb", cfg.cache_vmem_mb)
+            kw.setdefault("duplication", True)
+            kw.setdefault("dup_budget_mb", cfg.dup_budget_mb)
+            # the serving megakernel always runs the kernel program (interpret
+            # mode on CPU — the validation configuration)
+            kw.setdefault("exec_backend", "kernel")
+        return cls(bags=bags, **kw)

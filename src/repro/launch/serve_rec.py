@@ -36,61 +36,62 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import duplication, intra_gnr
-from repro.cache.sram_cache import PrefetchScheduler
+from repro import engine as engine_mod
 from repro.configs import registry
-from repro.core import packed_tables, placement
 from repro.data import synthetic
+from repro.engine import EngineSpec, big_rows, big_subtable  # noqa: F401 (re-export)
 from repro.models import dlrm
-
-
-def big_subtable(emb) -> tuple[str, int]:
-    """(name, rows) of the streamed/tiered big subtable the cache covers."""
-    if emb.kind == "qr":
-        return "q", emb.qr_spec.q_rows
-    if emb.kind == "tt":
-        return "g2", emb.tt_spec.v2
-    rows = emb.physical_hashed_rows if emb.kind == "hashed" else emb.vocab
-    return "table", rows
-
-
-def big_rows(idx: np.ndarray, emb) -> np.ndarray:
-    """Map a logical-index batch (bags, pooling) onto big-subtable rows (the
-    cached stream), via the analyzer's single-sourced decomposition."""
-    name, _rows = big_subtable(emb)
-    trace, _r, _b = intra_gnr.subtable_traces(idx, emb)[name]
-    return trace
 
 
 @dataclasses.dataclass
 class ServeState:
     """The offline pass's output, built once per session and reusable across
     pipeline runs (schedulers are stateful, so ``run_pipeline`` constructs a
-    fresh set from ``slot_budgets`` + ``values`` per run)."""
+    fresh set from the plan per run).
 
-    bags: list
-    plan: duplication.DuplicationPlan
-    locs: list[dict]                     # per-table intra-GnR analyses
-    values: list[np.ndarray]             # per-table prefetch values (big subtable)
-    layout: packed_tables.PackedLayout
-    slot_budgets: list[int]
+    A thin view over the engine's ``EmbeddingPlan``: the legacy field names
+    (``plan`` = the duplication plan, ``layout``, ``slot_budgets``, ...) are
+    kept for the benchmarks and tests that read them.
+    """
 
-    def fresh_schedulers(self) -> list[PrefetchScheduler]:
-        _name, rows = big_subtable(self.bags[0].emb)
-        return [
-            PrefetchScheduler(rows, slots, value)
-            for slots, value in zip(self.slot_budgets, self.values)
-        ]
+    engine: engine_mod.EmbeddingEngine
+
+    @property
+    def eplan(self) -> engine_mod.EmbeddingPlan:
+        return self.engine.plan
+
+    @property
+    def bags(self) -> list:
+        return self.engine.bags
+
+    @property
+    def plan(self):                          # the duplication plan
+        return self.eplan.dup
+
+    @property
+    def locs(self) -> list[dict]:            # per-table intra-GnR analyses
+        return list(self.eplan.locality)
+
+    @property
+    def values(self) -> list[np.ndarray]:    # per-table prefetch values
+        return list(self.eplan.values)
+
+    @property
+    def layout(self):
+        return self.eplan.layout
+
+    @property
+    def slot_budgets(self) -> list[int]:
+        return list(self.eplan.slot_budgets)
+
+    def fresh_schedulers(self):
+        return self.engine.fresh_schedulers()
 
 
 def build_serve_state(cfg, *, shards: int, alpha: float, seed: int,
                       profile_n: int = 50_000) -> ServeState:
-    """Offline pass: profile -> analyze -> slot waterfill -> dup plan -> packed
-    layout + per-table schedulers."""
-    bags = dlrm.make_bags(cfg)
-    emb = bags[0].emb
-    name, rows = big_subtable(emb)
-
+    """Offline pass, one ``engine.plan`` call: profile -> analyze -> slot
+    waterfill -> dup plan -> packed layout, compiled into the serving engine."""
     # per-table request streams: each sparse feature sees its own skew
     traces = [
         synthetic.zipf_trace(
@@ -98,54 +99,9 @@ def build_serve_state(cfg, *, shards: int, alpha: float, seed: int,
         )
         for t in range(cfg.num_tables)
     ]
-    counts = [placement.profile_counts(tr, cfg.vocab_per_table) for tr in traces]
-    locs, values = [], []
-    for tr in traces:
-        pooled = tr[: profile_n - profile_n % cfg.pooling].reshape(-1, cfg.pooling)
-        loc = intra_gnr.analyze_table(pooled, emb)
-        locs.append(loc)
-        values.append(loc[name].prefetch_value().astype(np.float64))
-
-    # adaptive per-table slot budgets: waterfill the global budget by the
-    # analyzer's prefetch value instead of one uniform cache_slots knob.
-    # The global budget is clamped so the PACKED cache block (every table's
-    # slots in one VMEM-resident buffer) fits the configured SRAM size class.
-    row_bytes = (emb.tt_spec.g2_width if emb.kind == "tt" else emb.dim) \
-        * np.dtype(cfg.pdtype).itemsize
-    vmem_slots = (cfg.cache_vmem_mb * 2**20) // max(1, row_bytes)
-    total_slots = min(cfg.cache_slots * cfg.num_tables, vmem_slots)
-    if getattr(cfg, "cache_slot_policy", "adaptive") == "adaptive":
-        budgets = intra_gnr.split_slot_budget(values, total_slots)
-    else:
-        budgets = [min(cfg.cache_slots, total_slots // cfg.num_tables)] \
-            * cfg.num_tables
-    budgets = [max(1, min(b, rows)) for b in budgets]
-
-    plan = duplication.plan_duplication(
-        bags, counts,
-        num_shards=shards, budget_bytes=cfg.dup_budget_mb * 2**20,
-        slot_budgets=budgets,
-    )
-    layout = packed_tables.build_layout(bags, budgets)
-    return ServeState(bags, plan, locs, values, layout, budgets)
-
-
-# Module-level jits keyed by STATIC layout/config (both hashable frozen
-# dataclasses): repeated run_pipeline calls — the benchmark's best-of repeats,
-# --mode both — hit jax's compilation cache instead of re-tracing per closure.
-
-@functools.partial(jax.jit, static_argnames=("layout",))
-def _gather_jit(packed, scale, idx, slot, cache_rows, layout):
-    from repro.kernels import ops
-
-    streams = packed_tables.pack_indices(idx, layout)
-    streams["slot"] = packed_tables.global_slots(slot, layout)
-    cache = packed[packed_tables.big_key(layout.kind)][cache_rows]
-    pooled = ops.packed_multi_pooled(
-        {**packed, "cache": cache}, streams,
-        kind=layout.kind, dims=layout.tt_dims, exec_mode="kernel",
-    )
-    return pooled * scale[None, :, None].astype(pooled.dtype)
+    spec = EngineSpec.from_dlrm(cfg, serving=True)
+    eplan = engine_mod.plan(spec, num_shards=shards, trace=traces)
+    return ServeState(engine=engine_mod.compile(eplan))
 
 
 # Donate the consumed pooled buffer to the head on TPU (the double buffer's
@@ -164,14 +120,15 @@ def make_packed_gather(params, state: ServeState):
     Packs the tables once (device-side); per batch the caller passes the
     logical indices, the per-table local slot maps, and the scheduler's packed
     cache rows — the cache-block gather ``big[cache_rows]`` *is* the staging
-    DMA, overlapped (on hardware) with the previous batch.
+    DMA, overlapped (on hardware) with the previous batch.  The dispatch is
+    ``EmbeddingEngine.serve_gather`` — one module-level jit keyed by the
+    hashable plan, so repeated sessions hit jax's compilation cache.
     """
-    layout = state.layout
-    packed = packed_tables.pack_params(params["tables"], layout)
-    scale = packed_tables.combiner_scale(state.bags, jnp.float32)
+    eng = state.engine
+    packed = eng.pack(params["tables"])
 
     def gather(idx, slot, cache_rows):
-        return _gather_jit(packed, scale, idx, slot, cache_rows, layout)
+        return eng.serve_gather(packed, idx, slot, cache_rows)
 
     return gather
 
@@ -222,9 +179,7 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
             [scheds[i].slots_for(rows_np[t][:, i]) for i in range(cfg.num_tables)],
             axis=1,
         )
-        cache_rows = packed_tables.packed_cache_rows(
-            [s.cache_rows() for s in scheds], state.layout
-        )
+        cache_rows = state.engine.packed_cache_rows(scheds)
         return gather(
             jnp.asarray(idx_np[t]), jnp.asarray(slot), jnp.asarray(cache_rows)
         )
@@ -299,6 +254,8 @@ def main(argv=None) -> int:
                     choices=["overlap", "sequential", "both"])
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write measured QPS / hit-rate records as JSON")
+    ap.add_argument("--plan-json", default=None, metavar="PATH",
+                    help="write the EmbeddingPlan summary as JSON (CI artifact)")
     args = ap.parse_args(argv)
 
     name = f"{args.arch}-smoke" if (args.smoke or args.tiny) else args.arch
@@ -311,6 +268,10 @@ def main(argv=None) -> int:
     emb = state.bags[0].emb
     big_name, _rows = big_subtable(emb)
     plan = state.plan
+    if args.plan_json:
+        with open(args.plan_json, "w") as f:
+            json.dump(state.engine.summary(), f, indent=1)
+        print(f"# wrote EmbeddingPlan summary to {args.plan_json}")
     print(
         f"{cfg.name}: {cfg.num_tables} tables, kind={cfg.embedding_kind}, "
         f"slot budgets {min(state.slot_budgets)}..{max(state.slot_budgets)} "

@@ -13,17 +13,19 @@ Production behaviors implemented and exercised here (CPU smoke scale):
 Usage (CPU smoke):
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
         --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+    PYTHONPATH=src python -m repro.launch.train --arch dlrm-qr --smoke \
+        --steps 10 --batch 16   # the paper's model; GnR via repro.engine
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import signal
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs import registry
@@ -31,18 +33,51 @@ from repro.data import synthetic
 from repro.distributed import sharding as SH
 from repro.launch import mesh as mesh_mod
 from repro.train import optimizer as opt_mod
-from repro.train.train_step import make_train_step
+from repro.train.train_step import make_dlrm_loss, make_train_step
 
 
-def build(args):
+def _build_model(args):
+    """-> (cfg, params, axes, loss_fn0, make_batch) for LM or DLRM archs.
+
+    DLRM archs (``--arch dlrm-qr`` etc.) train the paper's model: the
+    embedding layer routes through the engine front door (``repro.engine``,
+    via ``dlrm.forward_dlrm``) and batches carry planted CTR structure so the
+    loss is learnable.
+    """
+    if args.arch.startswith("dlrm"):
+        from repro import engine as engine_mod
+        from repro.engine import EngineSpec
+        from repro.models import dlrm as dlrm_mod
+
+        name = f"{args.arch}-smoke" if args.smoke else args.arch
+        cfg = registry.get_dlrm(name)
+        if args.embedding:
+            cfg = dataclasses.replace(cfg, embedding_kind=args.embedding)
+        params, axes = dlrm_mod.init_dlrm(jax.random.PRNGKey(args.seed), cfg)
+        loss_fn0 = make_dlrm_loss(cfg)
+        truth = synthetic.dlrm_truth(cfg)
+        eng = engine_mod.engine_for(EngineSpec.from_dlrm(cfg))
+        print(f"[engine] {cfg.name}: {eng.summary()}")
+
+        def make_batch(b, s, **kw):
+            return synthetic.dlrm_planted_batch(cfg, truth, b, **kw)
+
+        return cfg, params, axes, loss_fn0, make_batch
+
     binding = registry.get(args.arch)
     cfg = binding.smoke if args.smoke else binding.config
     if args.embedding:
         cfg = cfg.replace(embedding_kind=args.embedding)
     init = registry.init_fn(binding)
     params, axes = init(jax.random.PRNGKey(args.seed), cfg)
-    opt_state = opt_mod.init(params)
     loss_fn0 = registry.train_loss_fn(binding, cfg)
+    make_batch = registry.make_batch_fn(binding, cfg)
+    return cfg, params, axes, loss_fn0, make_batch
+
+
+def build(args):
+    cfg, params, axes, loss_fn0, make_batch = _build_model(args)
+    opt_state = opt_mod.init(params)
 
     mesh = None
     if args.mesh_shape:
@@ -73,7 +108,6 @@ def build(args):
     step_fn = jax.jit(
         make_train_step(loss_fn, opt_cfg, microbatches=args.microbatches)
     )
-    make_batch = registry.make_batch_fn(binding, cfg)
     return cfg, params, opt_state, step_fn, make_batch
 
 
@@ -81,7 +115,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--embedding", default=None, choices=[None, "dense", "hashed", "qr"])
+    ap.add_argument("--embedding", default=None,
+                    choices=[None, "dense", "hashed", "qr", "tt"])
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

@@ -19,11 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DLRMConfig
-from repro.core import embedding_bag, qr_embedding
+from repro.core import embedding_bag
 from repro.core.embedding_bag import BagConfig
 from repro.core.overlap import parallel_branches
 from repro.core.qr_embedding import EmbeddingConfig
-from repro.distributed import jax_compat, sharding
+from repro.distributed import sharding
 from repro.models.layers import _normal
 
 
@@ -100,62 +100,15 @@ def init_dlrm(key, cfg: DLRMConfig):
 def _gnr(tables, idx, bags, cfg: DLRMConfig):
     """(B, T, pooling) indices -> (B, T, dim) pooled, two-level under a mesh.
 
-    Packable bag sets (uniform dense/QR/TT — every DLRM config) run ONE
-    packed-table megakernel dispatch instead of a per-table loop, on both the
-    single-chip and the sharded path (``repro.core.packed_tables``).
+    Routed through the engine front door (``repro.engine``): the memoized
+    engine for this config's bag set dispatches to the packed-table
+    megakernel on packable sets (every DLRM config) or the per-table loop,
+    single-chip or two-level sharded depending on the active mesh.
     """
-    from repro.core import packed_tables
+    from repro import engine as engine_mod
 
-    use_packed = packed_tables.packable(bags)
-    mesh = sharding.current_mesh()
-    if mesh is None or "model" not in mesh.shape:
-        if use_packed:
-            return packed_tables.packed_multi_bag_lookup(tables, idx, bags)
-        return embedding_bag.multi_bag_lookup(tables, idx, bags)
-
-    from jax.sharding import PartitionSpec as P
-
-    from repro.core import sharded_embedding as SE
-
-    row_axis = "model"
-    batch_spec = sharding.spec_for(("batch",))[0]
-    nsh = mesh.shape[row_axis]
-    plans = [SE.ShardPlan(b.emb, nsh) for b in bags]
-
-    def local_fn(tabs, indices):
-        if use_packed:
-            parts = SE.packed_local_partial(
-                tabs, indices, bags, plans, axis=row_axis
-            )
-            return jax.lax.psum(parts, row_axis)
-        outs = []
-        for t, (bag, plan) in enumerate(zip(bags, plans)):
-            p = tabs[t]
-            if bag.emb.kind == "qr":
-                part = SE.qr_bag_partial(p["q"], p["r"], indices[:, t], plan, axis=row_axis)
-            elif bag.emb.kind == "tt":
-                part = SE.tt_bag_partial(
-                    p["g1"], p["g2"], p["g3"], indices[:, t], plan, axis=row_axis
-                )
-            else:
-                part = SE.dense_bag_partial(p["table"], indices[:, t], plan, axis=row_axis)
-            outs.append(part)
-        return jax.lax.psum(jnp.stack(outs, axis=1), row_axis)
-
-    def tspec(bag):
-        if bag.emb.kind == "qr":
-            return {"q": P(row_axis, None), "r": P()}
-        if bag.emb.kind == "tt":
-            return {"g1": P(), "g2": P(row_axis, None), "g3": P()}
-        return {"table": P(row_axis, None)}
-
-    return jax_compat.shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=([tspec(b) for b in bags], P(batch_spec, None, None)),
-        out_specs=P(batch_spec, None, None),
-        check_vma=False,
-    )(tables, idx)
+    eng = engine_mod.engine_for(engine_mod.EngineSpec.from_bags(bags))
+    return eng.inline_gnr(tables, idx)
 
 
 def pad_tables_for_mesh(params, cfg: DLRMConfig, num_shards: int):

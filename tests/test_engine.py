@@ -1,0 +1,421 @@
+"""Engine front door (repro.engine): spec/plan hashability, parity of every
+engine entry with the legacy path it replaced — {dense, qr, tt} x {baseline,
+cached, dup, packed} x {single-chip, sharded} — gradients through the
+training entry, and the deprecation shims (warning + result parity)."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.core import embedding_bag as EB
+from repro.core import sharded_embedding as SE
+from repro.core.embedding_bag import BagConfig
+from repro.core.qr_embedding import EmbeddingConfig
+from repro.data.synthetic import zipf_trace
+from repro.engine import EngineSpec
+
+KINDS = [("dense", {}), ("qr", {"collision": 8}), ("tt", {"tt_rank": 4})]
+
+
+def _bags(kind, num_tables=3, vocab=1024, dim=32, pooling=8, **kw):
+    emb = EmbeddingConfig(
+        vocab=vocab, dim=dim, kind=kind, param_dtype=jnp.float32,
+        compute_dtype=jnp.float32, **kw,
+    )
+    return [BagConfig(emb=emb, pooling=pooling) for _ in range(num_tables)]
+
+
+# ---------------------------------------------------------------------------
+# spec + plan: validation, hashability, summaries
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    bags = _bags("dense")
+    with pytest.raises(ValueError, match="at least one bag"):
+        EngineSpec(bags=())
+    with pytest.raises(ValueError, match="packing"):
+        EngineSpec.from_bags(bags, packing="sometimes")
+    with pytest.raises(ValueError, match="backend"):
+        EngineSpec.from_bags(bags, exec_backend="cuda")
+    with pytest.raises(ValueError, match="slot policy"):
+        EngineSpec.from_bags(bags, cache_slot_policy="lru")
+
+
+def test_plan_is_hashable_and_stable():
+    bags = _bags("qr", collision=8)
+    spec = EngineSpec.from_bags(bags, cache_slots=16)
+    p1 = E.plan(spec, num_shards=2)
+    p2 = E.plan(spec, num_shards=2)
+    assert hash(p1) == hash(p2) and p1 == p2          # jit-static-arg safe
+    assert p1 != E.plan(spec, num_shards=4)
+    # trace payloads must NOT change eq/hash (they are compare=False)
+    trace = [zipf_trace(1024, 2000, seed=t) for t in range(3)]
+    p3 = E.plan(spec.replace(cache_slot_policy="uniform"), num_shards=2)
+    assert p3.slot_budgets == p1.slot_budgets or p3 != p1
+
+
+def test_plan_summary_is_json_serializable():
+    import json
+
+    bags = _bags("tt", tt_rank=4)
+    trace = [zipf_trace(1024, 2000, seed=t) for t in range(3)]
+    spec = EngineSpec.from_bags(bags, cache_slots=8, duplication=True)
+    plan = E.plan(spec, num_shards=2, trace=trace)
+    s = json.loads(json.dumps(plan.summary()))
+    assert s["backend"] == "packed" and s["num_tables"] == 3
+    assert len(s["slot_budgets"]) == 3 and s["total_slots"] > 0
+    assert "replicated_bytes_per_chip" in s
+    assert len(s["mean_intra_reuse_big"]) == 3
+
+
+def test_plan_adaptive_budgets_waterfill():
+    bags = _bags("qr", collision=8)
+    # tables see different skews -> the waterfill splits unevenly
+    trace = [zipf_trace(1024, 8000, alpha=1.4, seed=0),
+             zipf_trace(1024, 8000, alpha=1.01, seed=1),
+             zipf_trace(1024, 8000, alpha=1.01, seed=2)]
+    spec = EngineSpec.from_bags(bags, cache_slots=16)
+    plan = E.plan(spec, trace=trace)
+    assert sum(plan.slot_budgets) <= 16 * 3
+    assert all(b >= 1 for b in plan.slot_budgets)
+    assert len(set(plan.slot_budgets)) > 1          # value-driven, not uniform
+    uniform = E.plan(spec.replace(cache_slot_policy="uniform"), trace=trace)
+    assert len(set(uniform.slot_budgets)) == 1
+
+
+def test_engine_for_is_memoized():
+    spec = EngineSpec.from_bags(_bags("dense"))
+    assert E.engine_for(spec) is E.engine_for(spec)
+
+
+# ---------------------------------------------------------------------------
+# single-chip parity: packed + per-table backends vs the legacy semantic loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+@pytest.mark.parametrize("packing", ["auto", "off"])
+def test_engine_lookup_matches_legacy(kind, kw, packing):
+    bags = _bags(kind, **kw)
+    tables = EB.init_tables(jax.random.PRNGKey(0), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (5, 3, 8), 0, 1024)
+    eng = E.compile(E.plan(EngineSpec.from_bags(bags, packing=packing)))
+    assert eng.plan.backend == ("packed" if packing == "auto" else "pertable")
+    out = eng.lookup(tables, idx)
+    oracle = EB.multi_bag_lookup(tables, idx, bags)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+def test_engine_kernel_backend_matches_oracle(kind, kw):
+    """exec_backend="kernel" runs the megakernel program (interpret on CPU)."""
+    bags = _bags(kind, **kw)
+    tables = EB.init_tables(jax.random.PRNGKey(2), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(3), (4, 3, 8), 0, 1024)
+    eng = E.compile(E.plan(EngineSpec.from_bags(bags, exec_backend="kernel")))
+    out = eng.lookup(tables, idx, interpret=True)
+    oracle = EB.multi_bag_lookup(tables, idx, bags)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+def test_engine_grad_parity_training_entry(kind, kw):
+    """jax.grad through engine.lookup: kernel path == jnp oracle path, for
+    every table leaf (the custom-vjp-backed training entry)."""
+    bags = _bags(kind, num_tables=2, **kw)
+    tables = EB.init_tables(jax.random.PRNGKey(4), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(5), (3, 2, 4), 0, 1024)
+
+    def loss(tabs, backend, interpret):
+        eng = E.compile(E.plan(EngineSpec.from_bags(bags, exec_backend=backend)))
+        out = eng.lookup(tabs, idx, interpret=interpret)
+        return (out.astype(jnp.float32) ** 2).sum()
+
+    gk = jax.grad(lambda t: loss(t, "kernel", True))(tables)
+    gr = jax.grad(lambda t: loss(t, "jnp", None))(tables)
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    assert any(float(jnp.abs(g).max()) > 0 for g in jax.tree.leaves(gk))
+
+
+# ---------------------------------------------------------------------------
+# cached serving parity (single-chip): scheduler slots through the engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+def test_engine_cached_lookup_matches_uncached(kind, kw):
+    from repro.cache.sram_cache import PrefetchScheduler
+
+    bags = _bags(kind, num_tables=1, **kw)
+    emb = bags[0].emb
+    params = EB.init_tables(jax.random.PRNGKey(6), bags)[0]
+    idx = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(7), (6, 8), 0, 1024))
+    _name, rows = E.big_subtable(emb)
+    sched = PrefetchScheduler(rows, 16)
+    r = E.big_rows(idx, emb)
+    sched.prefetch(r)
+    slot = sched.slots_for(r)
+    assert (slot >= 0).any()
+
+    eng = E.engine_for(EngineSpec.from_bags(bags))
+    out = eng.cached_lookup(
+        params, jnp.asarray(idx), 0,
+        cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
+    )
+    oracle = EB.bag_lookup(params, jnp.asarray(idx), bags[0])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+def test_engine_serve_gather_matches_oracle(kind, kw):
+    """The full serving dispatch: plan w/ cache -> pack -> serve_gather."""
+    bags = _bags(kind, **kw)
+    tables = EB.init_tables(jax.random.PRNGKey(8), bags)
+    idx = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(9), (6, 3, 8), 0, 1024))
+    trace = [idx[:, t].reshape(-1) for t in range(3)]
+    spec = EngineSpec.from_bags(bags, cache_slots=16, exec_backend="kernel")
+    eng = E.compile(E.plan(spec, trace=trace))
+    assert eng.plan.has_cache
+
+    scheds = eng.fresh_schedulers()
+    slot = []
+    for t in range(3):
+        r = E.big_rows(idx[:, t], bags[t].emb)
+        scheds[t].prefetch(r)
+        slot.append(scheds[t].slots_for(r))
+    slot = np.stack(slot, axis=1)
+    assert (slot >= 0).any()
+
+    packed = eng.pack(tables)
+    out = eng.serve_gather(
+        packed, jnp.asarray(idx), jnp.asarray(slot),
+        jnp.asarray(eng.packed_cache_rows(scheds)),
+    )
+    oracle = EB.multi_bag_lookup(tables, jnp.asarray(idx), bags)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# duplication plan on a 1x1 mesh (single device): comm-free local serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+def test_engine_gnr_dup_single_device(kind, kw):
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    bags = _bags(kind, num_tables=2, **kw)
+    tables = EB.init_tables(jax.random.PRNGKey(10), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(11), (4, 2, 8), 0, 1024)
+    oracle = EB.multi_bag_lookup(tables, idx, bags)
+    trace = [zipf_trace(1024, 4000, seed=t) for t in range(2)]
+
+    spec = EngineSpec.from_bags(bags, duplication=True, dup_budget_bytes=1 << 24)
+    eng = E.compile(E.plan(spec, mesh=mesh, trace=trace))
+    assert eng.plan.dup is not None and all(eng.plan.comm_free)
+    fn = eng.gnr(mesh)
+    out = fn(tables, idx, eng.hot_tiers(tables))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded parity (8-device host mesh, one subprocess per kind):
+# {baseline, packed two-level, per-table two-level, dup comm-free + starved}
+# ---------------------------------------------------------------------------
+
+_SHARDED = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro import engine as E
+from repro.core import embedding_bag as EB, sharded_embedding as SE
+from repro.core.embedding_bag import BagConfig
+from repro.core.qr_embedding import EmbeddingConfig
+from repro.data.synthetic import zipf_trace
+from repro.engine import EngineSpec
+from repro.launch.mesh import make_mesh
+
+kind, kw = __KIND__, __KW__
+mesh = make_mesh((2, 4), ("data", "model"))
+emb = EmbeddingConfig(vocab=4096, dim=32, kind=kind, param_dtype=jnp.float32,
+                      compute_dtype=jnp.float32, **kw)
+bags = [BagConfig(emb=emb, pooling=8) for _ in range(2)]
+tables = EB.init_tables(jax.random.PRNGKey(0), bags)
+idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 8), 0, 4096)
+oracle = np.asarray(EB.multi_bag_lookup(tables, idx, bags))
+sharded = [SE.shard_qr_params(t, b.emb, mesh) for t, b in zip(tables, bags)]
+
+def check(out, tag):
+    np.testing.assert_allclose(np.asarray(out), oracle, rtol=1e-4, atol=1e-5,
+                               err_msg=tag)
+    print(tag, "OK")
+
+# packed two-level GnR
+eng = E.compile(E.plan(EngineSpec.from_bags(bags), mesh=mesh))
+assert eng.plan.packed
+check(eng.gnr(mesh)(sharded, idx), "packed")
+
+# per-table two-level GnR
+engp = E.compile(E.plan(EngineSpec.from_bags(bags, packing="off"), mesh=mesh))
+check(engp.gnr(mesh)(sharded, idx), "pertable")
+
+# GSPMD baseline (TT outer cores are too small to row-shard: skip tt)
+if kind != "tt":
+    check(eng.baseline(mesh)(sharded, idx), "baseline")
+
+# duplication: comm-free (generous budget) and mixed (starved budget) regimes
+trace = [zipf_trace(4096, 20000, seed=3 + t) for t in range(2)]
+for budget, expect_cf in ((32 * 2**20, True), (8192, False)):
+    spec = EngineSpec.from_bags(bags, duplication=True, dup_budget_bytes=budget)
+    engd = E.compile(E.plan(spec, mesh=mesh, trace=trace))
+    assert all(engd.plan.comm_free) == expect_cf, engd.plan.comm_free
+    out = engd.gnr(mesh)(tables, idx, engd.hot_tiers(tables))
+    check(out, f"dup budget={budget}")
+print("ALL OK")
+"""
+
+
+@pytest.mark.parametrize("kind,kw", KINDS)
+def test_engine_sharded_parity(kind, kw, mesh_runner):
+    code = _SHARDED.replace("__KIND__", repr(kind)).replace("__KW__", repr(kw))
+    out = mesh_runner(code, n_devices=8)
+    assert "ALL OK" in out
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: one-time warning + result parity with the engine
+# ---------------------------------------------------------------------------
+
+def _catch_deprecation():
+    SE._DEPRECATED_WARNED.clear()          # re-arm the warn-once latch
+    ctx = warnings.catch_warnings(record=True)
+    rec = ctx.__enter__()
+    warnings.simplefilter("always")
+    return ctx, rec
+
+
+def test_deprecated_cached_bag_lookup_warns_and_matches():
+    from repro.cache.sram_cache import PrefetchScheduler
+
+    bags = _bags("qr", num_tables=1, collision=8)
+    params = EB.init_tables(jax.random.PRNGKey(0), bags)[0]
+    idx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 1024))
+    _name, rows = E.big_subtable(bags[0].emb)
+    sched = PrefetchScheduler(rows, 8)
+    r = E.big_rows(idx, bags[0].emb)
+    sched.prefetch(r)
+    slot = sched.slots_for(r)
+
+    ctx, rec = _catch_deprecation()
+    try:
+        out = SE.cached_bag_lookup(
+            params, jnp.asarray(idx), bags[0],
+            cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
+        )
+        # warn-once: a second call must stay silent
+        before = len(rec)
+        SE.cached_bag_lookup(
+            params, jnp.asarray(idx), bags[0],
+            cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
+        )
+    finally:
+        ctx.__exit__(None, None, None)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "cached_bag_lookup" in str(deps[0].message)
+    assert "repro.core.sharded_embedding" in str(deps[0].message)
+    assert len([w for w in rec[before:]
+                if issubclass(w.category, DeprecationWarning)]) == 0
+
+    eng = E.engine_for(EngineSpec.from_bags(bags))
+    expect = eng.cached_lookup(
+        params, jnp.asarray(idx), 0,
+        cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_deprecated_builders_warn_and_match():
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    bags = _bags("qr", num_tables=2, collision=8)
+    tables = EB.init_tables(jax.random.PRNGKey(2), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(3), (4, 2, 8), 0, 1024)
+    oracle = EB.multi_bag_lookup(tables, idx, bags)
+
+    ctx, rec = _catch_deprecation()
+    try:
+        fn = SE.build_multi_bag_gnr(mesh, bags)
+        base = SE.gspmd_baseline_gnr(mesh, bags)
+    finally:
+        ctx.__exit__(None, None, None)
+    msgs = [str(w.message) for w in rec
+            if issubclass(w.category, DeprecationWarning)]
+    assert any("build_multi_bag_gnr" in m for m in msgs)
+    assert any("gspmd_baseline_gnr" in m for m in msgs)
+    np.testing.assert_allclose(np.asarray(fn(tables, idx)), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(base(tables, idx)),
+                               np.asarray(oracle), rtol=1e-5, atol=1e-5)
+
+
+def test_deprecated_dup_builder_warns_and_matches():
+    from repro.cache import duplication
+    from repro.core import placement
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    bags = _bags("qr", num_tables=2, collision=8)
+    tables = EB.init_tables(jax.random.PRNGKey(4), bags)
+    idx = jax.random.randint(jax.random.PRNGKey(5), (4, 2, 8), 0, 1024)
+    oracle = EB.multi_bag_lookup(tables, idx, bags)
+    counts = placement.profile_counts(zipf_trace(1024, 8000, seed=1), 1024)
+    dup = duplication.plan_duplication(
+        bags, [counts] * 2, num_shards=1, budget_bytes=1 << 24)
+
+    ctx, rec = _catch_deprecation()
+    try:
+        fn = SE.build_dup_multi_bag_gnr(mesh, bags, dup)
+    finally:
+        ctx.__exit__(None, None, None)
+    msgs = [str(w.message) for w in rec
+            if issubclass(w.category, DeprecationWarning)]
+    assert any("build_dup_multi_bag_gnr" in m for m in msgs)
+    tiers = SE.make_dup_hot_tiers(tables, bags, dup)
+    np.testing.assert_allclose(np.asarray(fn(tables, idx, tiers)),
+                               np.asarray(oracle), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the model forward routes through the engine (no mesh): DLRM parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dlrm-qr-smoke", "dlrm-tt-smoke",
+                                  "dlrm-dense-smoke"])
+def test_dlrm_forward_matches_semantic_gnr(arch):
+    from repro.configs import registry
+    from repro.models import dlrm
+
+    cfg = registry.get_dlrm(arch)
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+    bags = dlrm.make_bags(cfg)
+    idx = jax.random.randint(
+        jax.random.PRNGKey(1), (4, cfg.num_tables, cfg.pooling), 0,
+        cfg.vocab_per_table,
+    )
+    pooled = dlrm._gnr(params["tables"], idx, bags, cfg)
+    oracle = EB.multi_bag_lookup(params["tables"], idx, bags)
+    np.testing.assert_allclose(
+        np.asarray(pooled, dtype=np.float32),
+        np.asarray(oracle, dtype=np.float32), rtol=2e-2, atol=2e-2,
+    )
