@@ -1,0 +1,157 @@
+"""Autotuner benchmark: cost-model fidelity + tuned-vs-heuristic serving QPS.
+
+Maps to the paper's design-space exploration figures (cache size / duplication
+budget ladders): instead of sweeping blindly, the fitted cost model
+(``repro.tune``) predicts the ladder and this suite reports how well those
+predictions track reality:
+
+* ``autotune/rank_agreement``    — fraction of candidate pairs whose
+  predicted latency order matches the measured order (the acceptance bar is
+  >= 0.8 over pairs separated by more than noise);
+* ``autotune/cand_*``            — per-candidate measured vs predicted us;
+* ``autotune/tuned_vs_heuristic``— steady-state ``serve_qps`` of the tuned
+  plan against the heuristic plan through the same pipeline.
+
+CLI (the CI smoke step): ``python -m benchmarks.autotune --tiny --artifacts
+DIR`` additionally writes ``cost_model.json`` (the fitted models + samples)
+and ``plan_summary.json`` (the tuned plan) to DIR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import emit
+
+# measured differences below this are host noise (interpret-mode timings on
+# shared CPU hosts jitter ~10%); rank agreement only counts pairs separated
+# by more than it.
+_NOISE_REL = 0.10
+
+
+def _rank_agreement(scored: list) -> tuple[float, int]:
+    """scored: [(predicted_s, measured_s)] -> (agreement, pairs counted)."""
+    agree = pairs = 0
+    for i in range(len(scored)):
+        for j in range(i + 1, len(scored)):
+            pi, mi = scored[i]
+            pj, mj = scored[j]
+            if abs(mi - mj) <= _NOISE_REL * max(mi, mj):
+                continue                       # measured tie: unrankable
+            pairs += 1
+            if (pi - pj) * (mi - mj) > 0:
+                agree += 1
+    return (agree / pairs if pairs else 1.0), pairs
+
+
+def run(tiny: bool = False, artifacts_dir: str | None = None) -> None:
+    import jax
+    import numpy as np
+
+    from repro import tune
+    from repro.configs import registry
+    from repro.data import synthetic
+    from repro.engine import EngineSpec
+    from repro.launch import serve_rec
+    from repro.models import dlrm
+
+    cfg = registry.get_dlrm("dlrm-qr-smoke")
+    batch, batches, repeats = (8, 5, 3) if tiny else (16, 8, 3)
+    max_samples = 6 if tiny else 12
+
+    spec = EngineSpec.from_dlrm(cfg, serving=True)
+    traces = [
+        synthetic.zipf_trace(cfg.vocab_per_table, 50_000, alpha=1.05,
+                             seed=7 + t)
+        for t in range(cfg.num_tables)
+    ]
+
+    # fit on timed micro-runs of the real execution paths on THIS host, so
+    # predictions and the serving measurement share a machine.
+    t0 = time.time()
+    tuner = tune.fit(
+        spec, traces, mode="measure", batch=batch, num_shards=4,
+        max_samples=max_samples, repeats=repeats,
+    )
+    fit_wall = time.time() - t0
+    emit(
+        "autotune/fit_wall", fit_wall * 1e6,
+        f"mode={tuner.source} samples={len(tuner.samples)} "
+        f"device={tuner.metadata['device_kind']}",
+    )
+
+    # predicted-vs-measured over the fit's observations (both backends, both
+    # probe batch sizes — cross-backend and cross-size orderings are exactly
+    # what the backend knob and the per-byte term must get right)
+    scored = []
+    for i, s in enumerate(tuner.samples):
+        pred = tuner.models[s.knobs.backend].predict(s.features)
+        scored.append((pred, s.measured_s))
+        emit(
+            f"autotune/cand_{i}", s.measured_s * 1e6,
+            f"pred={pred * 1e6:.1f}us {s.knobs.describe()}",
+        )
+    agreement, pairs = _rank_agreement(scored)
+    emit(
+        "autotune/rank_agreement", 0.0,
+        f"agreement={agreement:.2f} over {pairs} rankable pairs "
+        f"(of {len(scored) * (len(scored) - 1) // 2})",
+    )
+
+    # tuned vs heuristic plans through the same serving pipeline
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+    state_h = serve_rec.build_serve_state(cfg, shards=4, alpha=1.05, seed=0)
+    state_t = serve_rec.build_serve_state(cfg, shards=4, alpha=1.05, seed=0,
+                                          tuner=tuner)
+    same_plan = state_t.eplan == state_h.eplan
+    qps = {}
+    for name, state in (("heuristic", state_h), ("tuned", state_t)):
+        if name == "tuned" and same_plan:
+            qps["tuned"] = qps["heuristic"]    # identical plan: don't re-time
+            continue
+        best = None
+        for _ in range(repeats):
+            res = serve_rec.run_pipeline(
+                cfg, batch=batch, batches=batches, mode="overlap",
+                state=state, params=params,
+            )
+            if best is None or res["wall_s"] < best["wall_s"]:
+                best = res
+        qps[name] = best["qps"]
+        us = best["wall_s"] * 1e6 / max(1, batches - 1)
+        emit(f"autotune/serve_{name}", us,
+             f"qps={best['qps']:.1f} hit={best['hit_rate']:.3f}")
+    ratio = qps["tuned"] / max(qps["heuristic"], 1e-9)
+    emit(
+        "autotune/tuned_vs_heuristic", 0.0,
+        f"tuned/heuristic={ratio:.2f}x "
+        + ("(tuned plan == heuristic plan)" if same_plan
+           else f"knobs={state_t.eplan.knobs.describe()}"),
+    )
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        with open(os.path.join(artifacts_dir, "cost_model.json"), "w") as f:
+            json.dump(tuner.describe(), f, indent=1)
+        with open(os.path.join(artifacts_dir, "plan_summary.json"), "w") as f:
+            json.dump(state_t.engine.summary(), f, indent=1)
+        print(f"# wrote cost_model.json + plan_summary.json to {artifacts_dir}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="write cost_model.json + plan_summary.json here")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(tiny=args.tiny, artifacts_dir=args.artifacts)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

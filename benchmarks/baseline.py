@@ -1,0 +1,117 @@
+"""Tolerance-gated diff of a measured benchmark JSON against a committed
+baseline (the ROADMAP "perf trajectory" gate).
+
+Baselines live in ``benchmarks/baselines/BENCH_<suite>.json`` — written by
+``scripts/refresh_baselines.py`` via ``benchmarks.run --tiny --json`` — and
+carry per-row host metadata (``benchmarks.common.run_metadata``).  The gate:
+
+* every baseline row name must appear in the measured run (a vanished row
+  means a suite silently stopped covering something) — always fatal;
+* timed rows (``us_per_call > 0``) must not regress beyond ``--rel-tol``.
+  Wall-clock across CI hosts is noisy, so the default tolerance is generous
+  (3.0 = 4x slower fails): the gate catches order-of-magnitude regressions
+  and structural breakage, not scheduler jitter.  When the measured run's
+  ``device_kind``/``backend`` differ from the baseline's, timing rows are
+  reported but not gated (cross-machine comparison is meaningless).
+
+CLI: ``python -m benchmarks.baseline --measured out.json --baseline
+benchmarks/baselines/BENCH_serve_qps.json [--rel-tol 3.0]`` — exit 1 on
+missing rows or gated regressions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(path: str) -> list[dict]:
+    with open(path) as f:
+        records = json.load(f)
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: expected a list of row records")
+    return records
+
+
+def _host(records: list[dict]) -> tuple[str, str]:
+    for r in records:
+        if "device_kind" in r:
+            return str(r.get("device_kind")), str(r.get("backend"))
+    return "unknown", "unknown"
+
+
+def compare(measured: list[dict], baseline: list[dict], *, rel_tol: float,
+            gate_timing: bool = True) -> dict:
+    """Diff measured rows against baseline rows (keyed by name).
+
+    Returns {"missing": [...], "regressions": [(name, base_us, meas_us,
+    ratio)], "improvements": [...], "checked": n}.
+    """
+    got = {r["name"]: r for r in measured}
+    missing, regressions, improvements = [], [], []
+    checked = 0
+    for b in baseline:
+        name = b["name"]
+        m = got.get(name)
+        if m is None:
+            missing.append(name)
+            continue
+        base_us, meas_us = float(b["us_per_call"]), float(m["us_per_call"])
+        if base_us <= 0 or meas_us <= 0:
+            continue                        # modeled/ratio rows: presence only
+        checked += 1
+        ratio = meas_us / base_us
+        if ratio > 1.0 + rel_tol:
+            regressions.append((name, base_us, meas_us, ratio))
+        elif ratio < 1.0 / (1.0 + rel_tol):
+            improvements.append((name, base_us, meas_us, ratio))
+    if not gate_timing:
+        regressions = []
+    return {
+        "missing": missing,
+        "regressions": regressions,
+        "improvements": improvements,
+        "checked": checked,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--rel-tol", type=float, default=3.0,
+                    help="gate: measured > baseline*(1+tol) fails (default 3.0)")
+    ap.add_argument("--force-timing", action="store_true",
+                    help="gate timings even across differing host metadata")
+    args = ap.parse_args(argv)
+
+    measured = _rows(args.measured)
+    baseline = _rows(args.baseline)
+    m_host, b_host = _host(measured), _host(baseline)
+    same_host_class = m_host == b_host
+    gate_timing = same_host_class or args.force_timing
+    if not same_host_class:
+        print(f"# host mismatch: baseline {b_host} vs measured {m_host} -> "
+              + ("timing gated anyway (--force-timing)" if gate_timing
+                 else "timing informational only"))
+
+    res = compare(measured, baseline, rel_tol=args.rel_tol,
+                  gate_timing=gate_timing)
+    for name in res["missing"]:
+        print(f"MISSING  {name}")
+    for name, base, meas, ratio in res["regressions"]:
+        print(f"REGRESS  {name}: {base:.1f}us -> {meas:.1f}us ({ratio:.2f}x)")
+    for name, base, meas, ratio in res["improvements"]:
+        print(f"IMPROVE  {name}: {base:.1f}us -> {meas:.1f}us ({ratio:.2f}x)")
+    print(f"# {res['checked']} timed rows checked against "
+          f"{len(baseline)} baseline rows "
+          f"(tol {args.rel_tol}, gate_timing={gate_timing})")
+    if res["missing"] or res["regressions"]:
+        return 1
+    print("# baseline gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

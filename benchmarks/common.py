@@ -2,12 +2,23 @@
 
 from __future__ import annotations
 
+import functools
 import json
 import time
 
 import jax
 
 ROWS: list[tuple[str, float, str]] = []
+
+
+@functools.lru_cache(maxsize=1)
+def run_metadata() -> dict:
+    """Host identity stamped on every JSON row, so baselines and tuner-cache
+    entries from different machines are never compared blindly (same fields
+    as the tuner cache: ``repro.tune.run_metadata``)."""
+    from repro.tune import run_metadata as _meta
+
+    return dict(_meta())
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -17,9 +28,11 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def write_json(path: str) -> None:
     """Dump every emitted row as machine-readable JSON (perf-trajectory
-    tracking across PRs: stable keys, one record per ``emit``)."""
+    tracking across PRs: stable keys, one record per ``emit``, each stamped
+    with the host/backend metadata)."""
+    meta = run_metadata()
     records = [
-        {"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS
+        {"name": n, "us_per_call": u, "derived": d, **meta} for n, u, d in ROWS
     ]
     with open(path, "w") as f:
         json.dump(records, f, indent=1)

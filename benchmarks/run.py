@@ -12,8 +12,8 @@ import time
 
 from benchmarks import common
 from benchmarks import (
-    cache_sim, collision_sweep, design_opt, locality, roofline, serve_qps,
-    traffic, tt_sweep,
+    autotune, cache_sim, collision_sweep, design_opt, locality, roofline,
+    serve_qps, traffic, tt_sweep,
 )
 
 SUITES = {
@@ -25,6 +25,7 @@ SUITES = {
     "cache_sim": cache_sim.run,        # paper: SRAM cache + duplication sweep
     "serve_qps": serve_qps.run,        # measured QPS: packed megakernel pipeline
     "roofline": roofline.run,          # deliverable (g)
+    "autotune": autotune.run,          # cost-model fidelity + tuned-vs-heuristic
 }
 
 

@@ -1,0 +1,62 @@
+"""Walkthrough of the trace-driven autotuner: trace -> fit cost model ->
+rank the knob space -> freeze the winner into an EmbeddingPlan.
+
+Run: PYTHONPATH=src python examples/autotune_plan.py
+"""
+
+import os
+import tempfile
+
+from repro import engine, tune
+from repro.configs.dlrm_qr import SMOKE
+from repro.data.synthetic import zipf_trace
+
+
+def main():
+    # 1. The spec declares WHAT to serve; the knobs decide HOW.
+    spec = engine.EngineSpec.from_dlrm(SMOKE, serving=True).replace(
+        duplication=False
+    )
+    traces = [
+        zipf_trace(b.emb.vocab, 16_384, alpha=1.05, seed=t)
+        for t, b in enumerate(spec.bags)
+    ]
+
+    # The heuristic defaults are what plan() picks with no tuner at all.
+    base = tune.default_knobs(spec, packable=True)
+    print("heuristic knobs:", base.describe())
+    print("knob space size:", len(tune.knob_space(spec, packable=True)))
+
+    # 2. Fit a per-kernel linear cost model from the trace.  mode="auto"
+    #    times real micro-runs on an accelerator and falls back to the
+    #    loop-aware HLO analyzer on CPU; the fit memoizes to cache_path
+    #    keyed by (spec digest, device kind), so re-running is free.
+    cache = os.path.join(tempfile.gettempdir(), "autotune_memo.json")
+    tuner = tune.fit(spec, traces, mode="auto", batch=16, max_samples=8,
+                     cache_path=cache)
+    print(f"\nfit: source={tuner.source} samples={len(tuner.samples)} "
+          f"cached={tuner.from_cache} device={tuner.metadata['device_kind']}")
+    for backend, model in tuner.models.items():
+        coefs = {f: f"{c:.3g}" for f, c in zip(tune.FEATURES, model.coef)}
+        print(f"  {backend}: {coefs}")
+
+    # 3. Rank every candidate by predicted latency.
+    print("\npredicted latency per candidate (best first):")
+    for knobs, pred in tuner.rank(spec, packable=True)[:5]:
+        tag = " <- heuristic" if knobs == base else ""
+        print(f"  {pred * 1e6:9.1f} us  {knobs.describe()}{tag}")
+
+    # 4. plan() freezes the winner; the knobs are part of the plan's hash,
+    #    so differently-tuned plans never collide in the jit cache.
+    eplan = engine.plan(spec, traces, tuner=tuner)
+    print("\ntuned plan knobs:", eplan.knobs.describe())
+    print("slot budgets:", eplan.slot_budgets)
+    assert eplan.knobs in tune.knob_space(spec, packable=True)
+
+    # The zero-trace fallback is bit-for-bit the old heuristic plan.
+    assert engine.plan(spec) == engine.plan(spec, knobs=base)
+    print("no-trace plan == heuristic-knobs plan: OK")
+
+
+if __name__ == "__main__":
+    main()

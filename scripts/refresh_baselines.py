@@ -1,0 +1,58 @@
+"""Regenerate the committed benchmark baselines in ``benchmarks/baselines/``.
+
+Runs the baseline-gated suites through ``benchmarks.run --tiny --json`` (the
+same path CI measures) and writes one ``BENCH_<suite>.json`` per suite, each
+row stamped with this host's device/backend/jax metadata so the gate
+(``benchmarks.baseline``) knows when a comparison crosses machines.
+
+Usage (from the repo root):
+    PYTHONPATH=src python scripts/refresh_baselines.py            # tiny (CI)
+    PYTHONPATH=src python scripts/refresh_baselines.py --full     # full size
+    PYTHONPATH=src python scripts/refresh_baselines.py --suites serve_qps
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+SUITES = ("serve_qps", "cache_sim")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+
+def refresh(suite: str, *, tiny: bool) -> str:
+    out = os.path.join(OUT_DIR, f"BENCH_{suite}.json")
+    cmd = [sys.executable, "-m", "benchmarks.run", "--only", suite,
+           "--json", out]
+    if tiny:
+        cmd.append("--tiny")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p
+    )
+    print(f"$ {' '.join(cmd)}")
+    subprocess.run(cmd, check=True, cwd=REPO, env=env)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suites", default=",".join(SUITES),
+                    help=f"comma-separated (default {','.join(SUITES)})")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size configs instead of --tiny (slow)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for suite in args.suites.split(","):
+        path = refresh(suite.strip(), tiny=not args.full)
+        print(f"# refreshed {path}")
+    print("# review the diff, then commit benchmarks/baselines/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -347,6 +347,7 @@ def packed_multi_bag_lookup(
     lengths: jax.Array | None = None,
     exec_mode: str = "auto",
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """All-tables GnR in one megakernel dispatch. ``indices``: (B, T, K).
 
@@ -364,7 +365,7 @@ def packed_multi_bag_lookup(
     packed["cache"] = dummy_cache(layout, emb.compute_dtype)
     pooled = ops.packed_multi_pooled(
         packed, streams, kind=layout.kind, dims=layout.tt_dims,
-        exec_mode=exec_mode, interpret=interpret,
+        exec_mode=exec_mode, interpret=interpret, dim_block=dim_block,
     )
     if lengths is None:
         pooled = pooled * combiner_scale(bags, pooled.dtype)[None, :, None]

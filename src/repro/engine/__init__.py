@@ -24,6 +24,11 @@ the legacy ``sharded_embedding`` builders are deprecated shims over it.
     eplan  = engine.plan(spec, num_shards=4, trace=traces)
     eng    = engine.compile(eplan)
     pooled = eng.lookup(tables, idx)          # or gnr(mesh) / serve_gather
+
+Every tunable decision in step 2 (lane tile, cache-slot budget + split
+policy, duplication budget, packed-vs-pertable backend) is an explicit
+``repro.tune.Knobs`` frozen into the plan: heuristic defaults with no tuner,
+the cost-model argmin with ``plan(spec, traces, tuner=tune.fit(spec, traces))``.
 """
 
 from repro.engine.engine import (           # noqa: F401

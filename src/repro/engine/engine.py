@@ -62,6 +62,7 @@ def _serve_gather_jit(packed, idx, slot, cache_rows, plan: EmbeddingPlan):
     pooled = ops.packed_multi_pooled(
         {**packed, "cache": cache}, streams,
         kind=layout.kind, dims=layout.tt_dims, exec_mode=plan.spec.exec_backend,
+        dim_block=plan.dim_block,
     )
     scale = packed_tables.combiner_scale(plan.bags, jnp.float32)
     return pooled * scale[None, :, None].astype(pooled.dtype)
@@ -90,6 +91,7 @@ class EmbeddingEngine:
             return packed_tables.packed_multi_bag_lookup(
                 tables, indices, self.bags, lengths=lengths,
                 exec_mode=self.spec.exec_backend, interpret=interpret,
+                dim_block=self.plan.dim_block,
             )
         if lengths is not None:
             raise NotImplementedError("ragged bags need a packable bag set")
@@ -288,7 +290,7 @@ class EmbeddingEngine:
             cache = params["q"][cache_rows]
             out = ops.cached_qr_pooled(
                 params["q"], cache, params["r"], q_idx, slot, r_idx,
-                interpret=interpret,
+                interpret=interpret, dim_block=self.plan.dim_block,
             )
         elif emb.kind == "tt":
             from repro.core import tt_embedding
@@ -306,7 +308,8 @@ class EmbeddingEngine:
         else:
             cache = params["table"][cache_rows]
             out = ops.cached_pooled(
-                params["table"], cache, idx, slot, interpret=interpret
+                params["table"], cache, idx, slot, interpret=interpret,
+                dim_block=self.plan.dim_block,
             )
         if bag.combiner == "mean":
             out = out / jnp.asarray(bag.pooling, out.dtype)

@@ -22,6 +22,7 @@ from repro.cache import duplication, intra_gnr
 from repro.cache.sram_cache import PrefetchScheduler
 from repro.core import packed_tables, placement
 from repro.engine.spec import EngineSpec
+from repro.tune.knobs import Knobs, default_knobs, slot_budgets as _knob_budgets
 
 
 def big_subtable(emb) -> tuple[str, int]:
@@ -66,6 +67,10 @@ class EmbeddingPlan:
     backend: str                                  # packed | pertable
     layout: packed_tables.PackedLayout | None
     slot_budgets: tuple[int, ...]
+    # the knob setting frozen into this plan (heuristic default or tuner
+    # argmin).  Part of eq/hash: plans differing only in tuned knobs must be
+    # distinct jit static arguments.
+    knobs: Knobs | None = None
     # planning payloads (host numpy; excluded from eq/hash)
     dup: duplication.DuplicationPlan | None = dataclasses.field(
         default=None, compare=False, repr=False
@@ -88,6 +93,11 @@ class EmbeddingPlan:
     @property
     def has_cache(self) -> bool:
         return sum(self.slot_budgets) > 0
+
+    @property
+    def dim_block(self) -> int | None:
+        """The lane tile frozen into this plan (None = ladder default)."""
+        return self.knobs.dim_block if self.knobs is not None else None
 
     @property
     def comm_free(self) -> tuple[bool, ...]:
@@ -119,6 +129,7 @@ class EmbeddingPlan:
             "total_slots": int(sum(self.slot_budgets)),
             "packed_rows": self.layout.total_rows if self.layout else 0,
             "comm_free": list(self.comm_free),
+            "knobs": self.knobs.describe() if self.knobs is not None else None,
         }
         if self.dup is not None:
             out["replicated_bytes_per_chip"] = int(self.dup.replicated_bytes)
@@ -131,26 +142,6 @@ class EmbeddingPlan:
         return out
 
 
-def _slot_budgets(
-    spec: EngineSpec, values: list[np.ndarray] | None
-) -> tuple[int, ...]:
-    """Per-table cache-slot budgets under the spec's policy + VMEM ceiling."""
-    num_t = spec.num_tables
-    if spec.cache_slots <= 0:
-        return tuple(0 for _ in range(num_t))
-    emb = spec.bags[0].emb
-    width = emb.tt_spec.g2_width if emb.kind == "tt" else emb.dim
-    row_bytes = width * np.dtype(emb.param_dtype).itemsize
-    vmem_slots = (spec.cache_vmem_mb * 2**20) // max(1, row_bytes)
-    total = min(spec.cache_slots * num_t, vmem_slots)
-    if spec.cache_slot_policy == "adaptive" and values is not None:
-        budgets = intra_gnr.split_slot_budget(values, total)
-    else:
-        budgets = [min(spec.cache_slots, total // num_t)] * num_t
-    rows = [big_subtable(b.emb)[1] for b in spec.bags]
-    return tuple(max(1, min(b, r)) for b, r in zip(budgets, rows))
-
-
 def plan(
     spec: EngineSpec,
     mesh=None,
@@ -158,17 +149,30 @@ def plan(
     *,
     num_shards: int | None = None,
     dup: duplication.DuplicationPlan | None = None,
+    knobs: Knobs | None = None,
+    tuner=None,
 ) -> EmbeddingPlan:
     """Run the offline pipeline once: analyze -> budget -> duplicate -> pack.
 
     ``mesh`` (or ``num_shards``) sizes the row-shard axis the duplication
     planner models; ``trace`` is one logical-index trace per table — flat
-    ``(N,)`` or bag-shaped ``(bags, pooling)`` — feeding the analyzer.  A
-    pre-built ``dup`` plan may be adopted instead of re-planning (the
-    deprecation shims use this).  Without a trace, cache budgets fall back to
-    the uniform policy and no duplication plan is built.
+    ``(N,)`` or bag-shaped ``(bags, pooling)`` — feeding the analyzer.  The
+    trace may also be passed positionally in the mesh slot
+    (``plan(spec, traces, tuner=...)``); a list/tuple there is unambiguous.
+    A pre-built ``dup`` plan may be adopted instead of re-planning (the
+    deprecation shims use this).
+
+    Knob resolution: an explicit ``knobs=`` wins; else a fitted ``tuner=``
+    (:func:`repro.tune.fit`) picks the predicted-latency argmin over the knob
+    space; else the zero-trace heuristics (``tune.default_knobs``) reproduce
+    the historical plans bit-for-bit.  Without a trace, cache budgets fall
+    back to the uniform policy and no duplication plan is built.
     """
     bags = spec.bags
+    if isinstance(mesh, (list, tuple)):          # plan(spec, traces, ...)
+        if trace is not None:
+            raise ValueError("trace passed both positionally and as trace=")
+        mesh, trace = None, mesh
     if num_shards is None:
         num_shards = 1
         if mesh is not None and spec.row_axis in mesh.shape:
@@ -191,7 +195,15 @@ def plan(
                 placement.profile_counts(shaped.reshape(-1), bag.emb.vocab)
             )
 
-    budgets = _slot_budgets(spec, values)
+    packable = packed_tables.packable(bags)
+    if knobs is None and tuner is not None:
+        knobs = tuner.choose(spec, packable=packable)
+    if knobs is None:
+        knobs = default_knobs(spec, packable=packable)
+    if knobs.backend == "packed" and not packable:
+        raise ValueError("knobs.backend='packed' but the bag set is not packable")
+
+    budgets = _knob_budgets(spec, knobs, values)
 
     if dup is None and spec.duplication:
         if counts is None:
@@ -199,18 +211,14 @@ def plan(
                 "spec.duplication=True needs an access profile: pass trace= "
                 "(one per table) or adopt a pre-built plan via dup="
             )
-        budget_bytes = (
-            spec.dup_budget_bytes if spec.dup_budget_bytes is not None
-            else spec.dup_budget_mb * 2**20
-        )
         dup = duplication.plan_duplication(
             list(bags), counts,
             num_shards=num_shards,
-            budget_bytes=budget_bytes,
+            budget_bytes=int(knobs.dup_budget_bytes),
             slot_budgets=list(budgets),
         )
 
-    packed = spec.packing == "auto" and packed_tables.packable(bags)
+    packed = knobs.backend == "packed"
     layout = packed_tables.build_layout(bags, budgets) if packed else None
 
     return EmbeddingPlan(
@@ -219,6 +227,7 @@ def plan(
         backend="packed" if packed else "pertable",
         layout=layout,
         slot_budgets=budgets,
+        knobs=knobs,
         dup=dup,
         values=tuple(values) if values is not None else (),
         locality=tuple(locs),

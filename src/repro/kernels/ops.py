@@ -6,14 +6,16 @@ Dispatch rules:
   executes in Python, validating the exact TPU program;
 * arbitrary leading index shapes are flattened to the kernel's (N,)/(B,K)
   layouts and restored;
-* dims not divisible by the lane tile fall back to the jnp reference (the
-  assigned archs all have 128-aligned dims; tests exercise the fallback too).
+* the lane tile (``dim_block``) is an explicit knob: callers may pass a tuned
+  block (``repro.tune`` / ``EmbeddingPlan.dim_block``); ``None`` takes the
+  heuristic ladder default.  Dims with no 8-aligned tile fall back to the
+  jnp reference (the assigned archs all have 128-aligned dims; tests exercise
+  the fallback too).
 """
 
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -22,49 +24,34 @@ import numpy as np
 from repro.kernels import gnr_bag as _gnr
 from repro.kernels import qr_gather as _qr
 from repro.kernels import ref
+from repro.tune import knobs as _knobs
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-_DIM_BLOCK_WARNED: set[int] = set()
-
-
-def _warn_dim_once(dim: int, message: str) -> None:
-    if dim not in _DIM_BLOCK_WARNED:
-        _DIM_BLOCK_WARNED.add(dim)
-        warnings.warn(message, stacklevel=3)
-
-
 def _pick_dim_block(dim: int) -> int | None:
-    """Lane-tile choice for the dim-tiled kernels, with an explicit ladder:
+    """Heuristic lane-tile default — now sourced from the tuner's knob space
+    (``repro.tune.knobs``), same ladder: largest of 512/256/128 dividing dim,
+    else the whole dim as one padded tile when 8-aligned, else ``None`` (the
+    caller takes the pure-jnp reference path).  Kept as the zero-knob
+    fallback; tuned plans pass ``dim_block=`` explicitly instead."""
+    return _knobs.default_dim_block(dim)
 
-    * ``dim % 128 == 0``  -> the largest of 512/256/128 that divides dim
-      (the fast path every assigned config hits);
-    * ``dim % 8 == 0``    -> the whole dim as a single tile (Mosaic pads to
-      the 128 lane width, wasting lanes) — warned once per dim;
-    * otherwise           -> ``None``: the caller must take the pure-jnp
-      reference path — warned once per dim.
-    """
-    for bd in (512, 256, 128):
-        if dim % bd == 0:
-            return min(bd, dim)
-    if dim % 8 == 0:
-        _warn_dim_once(
-            dim,
-            f"embedding dim {dim} is not divisible by 128: the Pallas kernel "
-            f"runs it as a single {dim}-wide tile, padding to the 128 lane "
-            "width. Use a 128-multiple dim for full lane utilization.",
+
+def _resolve_dim_block(dim: int, dim_block: int | None) -> int | None:
+    """An explicit ``dim_block`` must be legal for ``dim``; ``None`` defers
+    to the heuristic ladder."""
+    if dim_block is None:
+        return _knobs.default_dim_block(dim)
+    valid = _knobs.valid_dim_blocks(dim)
+    if dim_block not in valid:
+        raise ValueError(
+            f"dim_block={dim_block} is not valid for dim {dim}; "
+            f"valid blocks: {list(valid) or '(none: jnp reference only)'}"
         )
-        return dim
-    _warn_dim_once(
-        dim,
-        f"embedding dim {dim} has no 8-aligned tile: falling back to the "
-        "pure-jnp reference path (no Pallas kernel). Use an 8-multiple dim "
-        "to run the fused kernel.",
-    )
-    return None
+    return dim_block
 
 
 def qr_lookup(
@@ -74,11 +61,12 @@ def qr_lookup(
     r_idx: jax.Array,
     *,
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Fused QR reconstruction for any index shape: (...,) -> (..., D)."""
     interpret = _interpret_default() if interpret is None else interpret
     dim = q_table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.qr_lookup_ref(q_table, r_lut, q_idx, r_idx)
     shape = q_idx.shape
@@ -96,11 +84,12 @@ def gnr_pooled(
     r_idx: jax.Array,
     *,
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Pooled QR bag for index shape (..., K) -> (..., D)."""
     interpret = _interpret_default() if interpret is None else interpret
     dim = q_table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.gnr_bag_ref(q_table, r_lut, q_idx, r_idx)
     *lead, k = q_idx.shape
@@ -225,6 +214,7 @@ def cached_pooled(
     slot: jax.Array,
     *,
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Cached pooled bag for index shape (..., K) -> (..., D).
 
@@ -235,7 +225,7 @@ def cached_pooled(
 
     interpret = _interpret_default() if interpret is None else interpret
     dim = table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.cached_bag_ref(table, cache, idx, slot)
     *lead, k = idx.shape
@@ -255,13 +245,14 @@ def cached_qr_pooled(
     r_idx: jax.Array,
     *,
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Cached pooled QR bag for index shape (..., K) -> (..., D)."""
     from repro.kernels import cached_gather as _cg
 
     interpret = _interpret_default() if interpret is None else interpret
     dim = q_table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.cached_qr_bag_ref(q_table, cache, r_lut, q_idx, slot, r_idx)
     *lead, k = q_idx.shape
@@ -285,6 +276,7 @@ def packed_dense_pooled(
     slot: jax.Array,
     *,
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Packed dense megabag for index shape (..., K) -> (..., D).
 
@@ -295,7 +287,7 @@ def packed_dense_pooled(
 
     interpret = _interpret_default() if interpret is None else interpret
     dim = table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.packed_bag_ref(table, cache, idx, slot)
     *lead, k = idx.shape
@@ -315,13 +307,14 @@ def packed_qr_pooled(
     r_idx: jax.Array,
     *,
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Packed QR megabag for index shape (..., K) -> (..., D)."""
     from repro.kernels import packed_gather as _pg
 
     interpret = _interpret_default() if interpret is None else interpret
     dim = q_table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.packed_qr_bag_ref(q_table, cache, r_lut, q_idx, slot, r_idx)
     *lead, k = q_idx.shape
@@ -372,17 +365,19 @@ def _zero_idx(*idxs):
     return tuple(np.zeros(i.shape, jax.dtypes.float0) for i in idxs)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _packed_dense_diff(table, cache, idx, slot, interpret):
-    return packed_dense_pooled(table, cache, idx, slot, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _packed_dense_diff(table, cache, idx, slot, interpret, dim_block=None):
+    return packed_dense_pooled(
+        table, cache, idx, slot, interpret=interpret, dim_block=dim_block
+    )
 
 
-def _packed_dense_diff_fwd(table, cache, idx, slot, interpret):
-    out = _packed_dense_diff(table, cache, idx, slot, interpret)
+def _packed_dense_diff_fwd(table, cache, idx, slot, interpret, dim_block=None):
+    out = _packed_dense_diff(table, cache, idx, slot, interpret, dim_block)
     return out, (table, cache, idx, slot)
 
 
-def _packed_dense_diff_bwd(interpret, res, ct):
+def _packed_dense_diff_bwd(interpret, dim_block, res, ct):
     table, cache, idx, slot = res
     _, vjp = jax.vjp(
         lambda t, c: ref.packed_bag_ref(t, c, idx, slot), table, cache
@@ -394,17 +389,20 @@ def _packed_dense_diff_bwd(interpret, res, ct):
 _packed_dense_diff.defvjp(_packed_dense_diff_fwd, _packed_dense_diff_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
-def _packed_qr_diff(q, cache, r, q_idx, slot, r_idx, interpret):
-    return packed_qr_pooled(q, cache, r, q_idx, slot, r_idx, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _packed_qr_diff(q, cache, r, q_idx, slot, r_idx, interpret, dim_block=None):
+    return packed_qr_pooled(
+        q, cache, r, q_idx, slot, r_idx, interpret=interpret, dim_block=dim_block
+    )
 
 
-def _packed_qr_diff_fwd(q, cache, r, q_idx, slot, r_idx, interpret):
-    out = _packed_qr_diff(q, cache, r, q_idx, slot, r_idx, interpret)
+def _packed_qr_diff_fwd(q, cache, r, q_idx, slot, r_idx, interpret,
+                        dim_block=None):
+    out = _packed_qr_diff(q, cache, r, q_idx, slot, r_idx, interpret, dim_block)
     return out, (q, cache, r, q_idx, slot, r_idx)
 
 
-def _packed_qr_diff_bwd(interpret, res, ct):
+def _packed_qr_diff_bwd(interpret, dim_block, res, ct):
     q, cache, r, q_idx, slot, r_idx = res
     _, vjp = jax.vjp(
         lambda a, c, b: ref.packed_qr_bag_ref(a, c, b, q_idx, slot, r_idx),
@@ -452,6 +450,7 @@ def packed_multi_pooled(
     dims: tuple[int, int, int, int] | None = None,
     exec_mode: str = "auto",
     interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """One megakernel dispatch for every table's pooled bag (differentiable).
 
@@ -477,7 +476,9 @@ def packed_multi_pooled(
         args = (params["q"], params["cache"], params["r"],
                 streams["q_idx"], streams["slot"], streams["r_idx"])
         if use_kernel:
-            return _packed_qr_diff(*args, bool(interpret) or _interpret_default())
+            return _packed_qr_diff(
+                *args, bool(interpret) or _interpret_default(), dim_block
+            )
         return ref.packed_qr_bag_ref(*args)
     if kind == "tt":
         args = (params["g1"], params["g2"], params["g3"], params["cache"],
@@ -490,18 +491,21 @@ def packed_multi_pooled(
     if kind == "dense":
         args = (params["table"], params["cache"], streams["idx"], streams["slot"])
         if use_kernel:
-            return _packed_dense_diff(*args, bool(interpret) or _interpret_default())
+            return _packed_dense_diff(
+                *args, bool(interpret) or _interpret_default(), dim_block
+            )
         return ref.packed_bag_ref(*args)
     raise ValueError(f"packed_multi_pooled: unsupported kind {kind!r}")
 
 
 def gnr_pooled_dense(
-    table: jax.Array, idx: jax.Array, *, interpret: bool | None = None
+    table: jax.Array, idx: jax.Array, *, interpret: bool | None = None,
+    dim_block: int | None = None,
 ) -> jax.Array:
     """Pooled dense bag for index shape (..., K) -> (..., D)."""
     interpret = _interpret_default() if interpret is None else interpret
     dim = table.shape[1]
-    bd = _pick_dim_block(dim)
+    bd = _resolve_dim_block(dim, dim_block)
     if bd is None:
         return ref.dense_bag_ref(table, idx)
     *lead, k = idx.shape

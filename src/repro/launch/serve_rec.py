@@ -89,9 +89,16 @@ class ServeState:
 
 
 def build_serve_state(cfg, *, shards: int, alpha: float, seed: int,
-                      profile_n: int = 50_000) -> ServeState:
+                      profile_n: int = 50_000, tuner=None,
+                      knobs=None) -> ServeState:
     """Offline pass, one ``engine.plan`` call: profile -> analyze -> slot
-    waterfill -> dup plan -> packed layout, compiled into the serving engine."""
+    waterfill -> dup plan -> packed layout, compiled into the serving engine.
+
+    ``tuner`` (a fitted ``repro.tune.Tuner``) or an explicit ``knobs`` routes
+    the plan through the cost-model argmin instead of the heuristics; the
+    serving pipeline needs the packed backend, so tuner choices are
+    constrained to it.
+    """
     # per-table request streams: each sparse feature sees its own skew
     traces = [
         synthetic.zipf_trace(
@@ -100,7 +107,9 @@ def build_serve_state(cfg, *, shards: int, alpha: float, seed: int,
         for t in range(cfg.num_tables)
     ]
     spec = EngineSpec.from_dlrm(cfg, serving=True)
-    eplan = engine_mod.plan(spec, num_shards=shards, trace=traces)
+    if knobs is None and tuner is not None:
+        knobs = tuner.choose(spec, backend="packed")
+    eplan = engine_mod.plan(spec, num_shards=shards, trace=traces, knobs=knobs)
     return ServeState(engine=engine_mod.compile(eplan))
 
 

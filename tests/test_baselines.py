@@ -1,0 +1,72 @@
+"""Committed benchmark baselines + the tolerance gate (benchmarks/baseline)."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import baseline as B
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+SUITES = ("serve_qps", "cache_sim")
+
+
+@pytest.mark.parametrize("suite", SUITES)
+def test_committed_baseline_parses(suite):
+    path = os.path.join(BASELINE_DIR, f"BENCH_{suite}.json")
+    assert os.path.exists(path), f"missing committed baseline {path}"
+    rows = B._rows(path)
+    assert rows, "baseline is empty"
+    for r in rows:
+        assert {"name", "us_per_call", "derived"} <= set(r)
+        # satellite: every row carries host metadata
+        assert {"backend", "device_kind", "jax_version"} <= set(r)
+    assert any(r["name"].startswith(f"{suite}/") for r in rows)
+    assert any(r["name"] == f"run/{suite}_wall" and r["us_per_call"] > 0
+               for r in rows)
+
+
+def _row(name, us, **meta):
+    return {"name": name, "us_per_call": us, "derived": "",
+            "device_kind": "cpu", "backend": "cpu", "jax_version": "x",
+            **meta}
+
+
+def test_compare_flags_missing_rows():
+    res = B.compare([_row("a", 10.0)], [_row("a", 10.0), _row("b", 5.0)],
+                    rel_tol=1.0)
+    assert res["missing"] == ["b"]
+    assert not res["regressions"]
+
+
+def test_compare_flags_regressions_within_tolerance():
+    base = [_row("a", 10.0), _row("b", 10.0), _row("c", 10.0)]
+    meas = [_row("a", 10.5),      # within tol
+            _row("b", 100.0),     # 10x: regression at tol 3.0
+            _row("c", 1.0)]       # 10x faster: improvement
+    res = B.compare(meas, base, rel_tol=3.0)
+    assert [r[0] for r in res["regressions"]] == ["b"]
+    assert [r[0] for r in res["improvements"]] == ["c"]
+    assert res["checked"] == 3
+    # cross-host comparisons report but never gate
+    res2 = B.compare(meas, base, rel_tol=3.0, gate_timing=False)
+    assert not res2["regressions"]
+
+
+def test_compare_skips_modeled_rows():
+    # us_per_call == 0 rows (modeled/ratio) are presence-checked only
+    res = B.compare([_row("a", 0.0)], [_row("a", 0.0)], rel_tol=0.1)
+    assert res["checked"] == 0 and not res["missing"]
+
+
+def test_refresh_script_covers_committed_suites():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "refresh_baselines",
+        os.path.join(REPO, "scripts", "refresh_baselines.py"),
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert tuple(mod.SUITES) == SUITES

@@ -97,26 +97,52 @@ def test_non_128_dim_single_tile(dim):
     )
 
 
-def test_pick_dim_block_explicit_fallback_warns_once():
-    """The fallback ladder is explicit: 128-multiples are silent; 8-aligned
-    non-128 dims warn once (single tile); unaligned dims warn once (jnp
-    reference).  The warning fires exactly once per dim."""
-    import warnings
+def test_pick_dim_block_ladder():
+    """The dim-block choice is now an explicit tuner knob
+    (``repro.tune.knobs``): the heuristic default reproduces the historical
+    ladder (largest of 512/256/128 dividing dim; whole dim when 8-aligned;
+    None = jnp reference), and the valid-block enumeration bounds what a
+    tuned plan may pass."""
+    from repro.tune import knobs as K
 
-    for d in (128, 256, 512, 640):
-        with warnings.catch_warnings():
-            warnings.simplefilter("error")
-            assert ops._pick_dim_block(d) in (128, 256, 512)
-    ops._DIM_BLOCK_WARNED.discard(96)
-    ops._DIM_BLOCK_WARNED.discard(13)
-    with pytest.warns(UserWarning, match="single 96-wide tile"):
-        assert ops._pick_dim_block(96) == 96
-    with pytest.warns(UserWarning, match="pure-jnp reference"):
-        assert ops._pick_dim_block(13) is None
-    with warnings.catch_warnings():            # second call: no re-warn
-        warnings.simplefilter("error")
-        assert ops._pick_dim_block(96) == 96
-        assert ops._pick_dim_block(13) is None
+    for d, want in ((128, 128), (256, 256), (512, 512), (640, 128),
+                    (384, 128)):
+        assert ops._pick_dim_block(d) == want == K.default_dim_block(d)
+    # 8-aligned, non-128 dims: single wide tile (96, 200)
+    assert ops._pick_dim_block(96) == 96
+    assert ops._pick_dim_block(200) == 200
+    assert K.valid_dim_blocks(96) == (96,)
+    assert K.valid_dim_blocks(200) == (200,)
+    # no 8-aligned tile at all: jnp reference only
+    assert ops._pick_dim_block(13) is None
+    assert K.valid_dim_blocks(13) == ()
+
+
+@pytest.mark.parametrize("dim,block", [(96, 96), (200, 200), (256, 128)])
+def test_explicit_dim_block_matches_oracle(dim, block):
+    """A tuner-chosen ``dim_block`` threads through the public wrappers and
+    produces oracle-identical results."""
+    q, r = _tables(64, 8, dim, jnp.float32)
+    key = jax.random.PRNGKey(11)
+    qi = jax.random.randint(key, (4, 6), 0, 64)
+    ri = jax.random.randint(key, (4, 6), 0, 8)
+    np.testing.assert_allclose(
+        np.asarray(ops.gnr_pooled(q, r, qi, ri, dim_block=block)),
+        np.asarray(ref.gnr_bag_ref(q, r, qi, ri)), rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_invalid_dim_block_rejected():
+    """An explicit block that is illegal for the dim is an error, and a dim
+    with no valid block rejects every explicit block."""
+    q, r = _tables(64, 8, 96, jnp.float32)
+    qi = jnp.zeros((2, 3), jnp.int32)
+    ri = jnp.zeros((2, 3), jnp.int32)
+    with pytest.raises(ValueError, match="not valid for dim 96"):
+        ops.gnr_pooled(q, r, qi, ri, dim_block=128)
+    q13, r13 = _tables(64, 8, 13, jnp.float32)
+    with pytest.raises(ValueError, match="not valid for dim 13"):
+        ops.gnr_pooled(q13, r13, qi, ri, dim_block=13)
 
 
 @given(

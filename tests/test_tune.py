@@ -1,0 +1,268 @@
+"""Autotuner tests: knob space, cost model, plan identity, fit round-trip."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import engine, tune
+from repro.configs.dlrm_qr import SMOKE
+from repro.data.synthetic import zipf_trace
+from repro.engine.spec import EngineSpec
+from repro.tune import (
+    CostSample, Knobs, default_knobs, fit_cost_model, knob_space,
+    plan_features, slot_budgets,
+)
+
+
+def _spec(**kw):
+    spec = EngineSpec.from_dlrm(SMOKE, serving=True).replace(duplication=False)
+    return spec.replace(**kw) if kw else spec
+
+
+def _traces(spec, n=4096):
+    return [zipf_trace(b.emb.vocab, n, seed=t) for t, b in enumerate(spec.bags)]
+
+
+# ---------------------------------------------------------------------------
+# knob space
+# ---------------------------------------------------------------------------
+
+def test_knob_space_default_first_and_unique():
+    spec = _spec()
+    space = knob_space(spec, packable=True)
+    assert space[0] == default_knobs(spec, packable=True)
+    assert len(set(space)) == len(space)
+    assert {k.backend for k in space} == {"packed", "pertable"}
+    # slot ladder: halve / keep / double around the spec's allowance
+    assert {k.cache_slots for k in space} == {
+        spec.cache_slots // 2, spec.cache_slots, spec.cache_slots * 2
+    }
+
+
+def test_knob_space_unpackable_pins_backend():
+    spec = _spec()
+    space = knob_space(spec, packable=False)
+    assert {k.backend for k in space} == {"pertable"}
+
+
+def test_knobs_hashable():
+    a = Knobs(dim_block=128, cache_slots=64)
+    b = Knobs(dim_block=128, cache_slots=64)
+    assert a == b and hash(a) == hash(b)
+    assert a != Knobs(dim_block=128, cache_slots=32)
+
+
+def test_slot_budgets_policies():
+    spec = _spec()
+    uniform = slot_budgets(
+        spec, Knobs(cache_slots=spec.cache_slots,
+                    cache_slot_policy="uniform"), None,
+    )
+    assert uniform == tuple([spec.cache_slots] * spec.num_tables)
+    # zero allowance -> no cache
+    assert slot_budgets(spec, Knobs(cache_slots=0), None) == (0,) * 4
+    # adaptive + values waterfills (unequal budgets for unequal value mass)
+    values = [np.arange(10, dtype=np.float64) * (t + 1) for t in range(4)]
+    adaptive = slot_budgets(
+        spec, Knobs(cache_slots=8, cache_slot_policy="adaptive"), values
+    )
+    assert sum(adaptive) <= 8 * 4 and len(set(adaptive)) > 1
+
+
+# ---------------------------------------------------------------------------
+# plan identity (satellite: no stale jit-cache hits)
+# ---------------------------------------------------------------------------
+
+def test_plans_differing_only_in_knobs_are_unequal():
+    spec = _spec()
+    traces = _traces(spec)
+    base = default_knobs(spec, packable=True)
+    import dataclasses
+
+    halved = dataclasses.replace(base, cache_slots=base.cache_slots // 2)
+    p1 = engine.plan(spec, trace=traces, knobs=base)
+    p2 = engine.plan(spec, trace=traces, knobs=halved)
+    assert p1 != p2
+    assert hash(p1) != hash(p2)
+    # same knobs -> equal plans, equal hashes (jit cache hit)
+    p3 = engine.plan(spec, trace=traces, knobs=base)
+    assert p1 == p3 and hash(p1) == hash(p3)
+
+
+def test_no_trace_plan_reproduces_heuristics():
+    """plan() with neither knobs nor tuner must match an explicit
+    default-knobs plan bit-for-bit (the zero-trace fallback guarantee)."""
+    spec = _spec()
+    p_plain = engine.plan(spec)
+    p_knobs = engine.plan(spec, knobs=default_knobs(spec, packable=True))
+    assert p_plain == p_knobs
+    assert p_plain.knobs == p_knobs.knobs
+    assert p_plain.slot_budgets == p_knobs.slot_budgets
+    # historical uniform budgets: min(spec.cache_slots, vmem-capped share)
+    assert p_plain.slot_budgets == (spec.cache_slots,) * spec.num_tables
+    # and with a trace, repeated planning is deterministic
+    traces = _traces(spec)
+    assert engine.plan(spec, trace=traces) == engine.plan(spec, trace=traces)
+
+
+def test_positional_trace_convenience():
+    spec = _spec()
+    traces = _traces(spec)
+    assert engine.plan(spec, traces) == engine.plan(spec, trace=traces)
+    with pytest.raises(ValueError, match="positionally and as trace="):
+        engine.plan(spec, traces, trace=traces)
+
+
+def test_packed_knobs_on_unpackable_spec_rejected():
+    spec = _spec()
+    import dataclasses
+
+    # mixed vocabs break the uniform-layout megakernel contract
+    bags = (spec.bags[0],) + tuple(
+        dataclasses.replace(b, emb=dataclasses.replace(b.emb, vocab=b.emb.vocab + 8))
+        for b in spec.bags[1:]
+    )
+    with pytest.raises(ValueError, match="not packable"):
+        engine.plan(
+            spec.replace(bags=bags),
+            knobs=Knobs(dim_block=32, cache_slots=128, backend="packed"),
+        )
+    # pertable knobs on a packable spec are fine (tuner may choose the loop)
+    p = engine.plan(spec, knobs=Knobs(dim_block=32, backend="pertable"))
+    assert not p.packed and p.layout is None
+
+
+def test_plan_summary_records_knobs():
+    spec = _spec()
+    s = engine.plan(spec).summary()
+    assert s["knobs"]["cache_slots"] == spec.cache_slots
+    assert s["knobs"]["backend"] == "packed"
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_fit_cost_model_recovers_coefficients():
+    rng = np.random.default_rng(0)
+    true = np.array([5e-6, 1e-9, 2e-7, 1e-10])
+    feats = rng.uniform(1.0, 100.0, size=(32, 4)) * np.array(
+        [1.0, 1e6, 1e2, 1e5]
+    )
+    y = feats @ true
+    samples = [
+        CostSample(knobs=Knobs(), features=tuple(f), measured_s=float(v))
+        for f, v in zip(feats, y)
+    ]
+    model = fit_cost_model(samples, backend="packed")
+    np.testing.assert_allclose(model.coef, true, rtol=1e-6)
+    # round-trips through JSON
+    from repro.tune import KernelCostModel
+
+    again = KernelCostModel.from_json(model.describe())
+    assert again.coef == model.coef
+
+
+def test_fit_cost_model_clips_negative_coefficients():
+    # y depends only on feature 0; collinear noise must not go negative
+    feats = np.array([[1.0, 2.0, 0.0, 0.0], [2.0, 1.0, 0.0, 0.0],
+                      [3.0, 5.0, 0.0, 0.0], [4.0, 1.0, 0.0, 0.0]])
+    y = feats[:, 0] * 10.0 - feats[:, 1] * 0.5
+    samples = [
+        CostSample(knobs=Knobs(), features=tuple(f), measured_s=float(v))
+        for f, v in zip(feats, y)
+    ]
+    model = fit_cost_model(samples, backend="packed")
+    assert all(c >= 0 for c in model.coef)
+
+
+def test_plan_features_track_knobs():
+    spec = _spec()
+    traces = _traces(spec)
+    prof = tune.TraceProfile.from_trace(spec, traces, batch=16)
+    base = default_knobs(spec, packable=True)
+    import dataclasses
+
+    f_base = plan_features(spec, base, prof)
+    # packed = 1 dispatch; pertable = T dispatches
+    assert f_base[0] == 1.0
+    f_pt = plan_features(
+        spec, dataclasses.replace(base, backend="pertable"), prof
+    )
+    assert f_pt[0] == spec.num_tables
+    # more cache slots -> no more streamed bytes (monotone non-increasing)
+    f_big = plan_features(
+        spec, dataclasses.replace(base, cache_slots=base.cache_slots * 4), prof
+    )
+    assert f_big[1] <= f_base[1] * 1.01
+    # no cache -> strictly more streamed bytes than the default budget
+    f_none = plan_features(
+        spec, dataclasses.replace(base, cache_slots=0), prof
+    )
+    assert f_none[1] > f_base[1]
+
+
+# ---------------------------------------------------------------------------
+# fit -> choose -> plan round-trip (HLO mode: no accelerator needed)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hlo_tuner_and_spec(tmp_path_factory):
+    spec = _spec()
+    traces = _traces(spec)
+    cache = str(tmp_path_factory.mktemp("tuner") / "cache.json")
+    tuner = tune.fit(spec, traces, mode="hlo", batch=8, max_samples=4,
+                     cache_path=cache)
+    return tuner, spec, traces, cache
+
+
+def test_fit_produces_models_and_samples(hlo_tuner_and_spec):
+    tuner, spec, _traces_, _ = hlo_tuner_and_spec
+    assert set(tuner.models) == {"packed", "pertable"}
+    assert tuner.samples and not tuner.from_cache
+    for m in tuner.models.values():
+        assert any(c > 0 for c in m.coef)
+    assert tuner.digest == tune.spec_digest(spec)
+    # metadata rides the tuner (cross-machine comparability)
+    assert {"backend", "device_kind", "jax_version"} <= set(tuner.metadata)
+
+
+def test_tuned_plan_selects_from_knob_space(hlo_tuner_and_spec):
+    tuner, spec, traces, _ = hlo_tuner_and_spec
+    p = engine.plan(spec, traces, tuner=tuner)
+    assert p.knobs in knob_space(spec, packable=True)
+    assert p.slot_budgets == tune.slot_budgets(
+        spec, p.knobs, list(p.values) or None
+    )
+    # backend filter: the serving pipeline can pin the packed megakernel
+    k_packed = tuner.choose(spec, backend="packed")
+    assert k_packed.backend == "packed"
+
+
+def test_fit_memo_cache_roundtrip(hlo_tuner_and_spec):
+    tuner, spec, traces, cache = hlo_tuner_and_spec
+    assert os.path.exists(cache)
+    again = tune.fit(spec, traces, mode="hlo", batch=8, max_samples=4,
+                     cache_path=cache)
+    assert again.from_cache
+    for b in tuner.models:
+        assert again.models[b].coef == pytest.approx(tuner.models[b].coef)
+    assert (engine.plan(spec, traces, tuner=again).knobs
+            == engine.plan(spec, traces, tuner=tuner).knobs)
+
+
+def test_spec_digest_stable_and_distinct():
+    spec = _spec()
+    assert tune.spec_digest(spec) == tune.spec_digest(spec)
+    assert tune.spec_digest(spec) != tune.spec_digest(
+        spec.replace(cache_slots=spec.cache_slots * 2)
+    )
+
+
+def test_rank_orders_by_prediction(hlo_tuner_and_spec):
+    tuner, spec, _t, _c = hlo_tuner_and_spec
+    ranked = tuner.rank(spec, packable=True)
+    preds = [p for _k, p in ranked]
+    assert preds == sorted(preds)
+    assert len(ranked) == len(knob_space(spec, packable=True))
