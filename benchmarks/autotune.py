@@ -10,7 +10,10 @@ predictions track reality:
   >= 0.8 over pairs separated by more than noise);
 * ``autotune/cand_*``            — per-candidate measured vs predicted us;
 * ``autotune/tuned_vs_heuristic``— steady-state ``serve_qps`` of the tuned
-  plan against the heuristic plan through the same pipeline.
+  plan against the heuristic plan through the same pipeline;
+* ``autotune/drift``             — the ``repro.obs.drift`` monitor's verdict
+  over the fit's own samples (rank-agreement floor; a re-fit recommendation
+  here means the freshly fitted model is already wrong on this host).
 
 CLI (the CI smoke step): ``python -m benchmarks.autotune --tiny --artifacts
 DIR`` additionally writes ``cost_model.json`` (the fitted models + samples)
@@ -26,26 +29,7 @@ import sys
 import time
 
 from benchmarks.common import emit
-
-# measured differences below this are host noise (interpret-mode timings on
-# shared CPU hosts jitter ~10%); rank agreement only counts pairs separated
-# by more than it.
-_NOISE_REL = 0.10
-
-
-def _rank_agreement(scored: list) -> tuple[float, int]:
-    """scored: [(predicted_s, measured_s)] -> (agreement, pairs counted)."""
-    agree = pairs = 0
-    for i in range(len(scored)):
-        for j in range(i + 1, len(scored)):
-            pi, mi = scored[i]
-            pj, mj = scored[j]
-            if abs(mi - mj) <= _NOISE_REL * max(mi, mj):
-                continue                       # measured tie: unrankable
-            pairs += 1
-            if (pi - pj) * (mi - mj) > 0:
-                agree += 1
-    return (agree / pairs if pairs else 1.0), pairs
+from repro.obs.drift import DriftMonitor, rank_agreement
 
 
 def run(tiny: bool = False, artifacts_dir: str | None = None) -> None:
@@ -95,7 +79,7 @@ def run(tiny: bool = False, artifacts_dir: str | None = None) -> None:
             f"autotune/cand_{i}", s.measured_s * 1e6,
             f"pred={pred * 1e6:.1f}us {s.knobs.describe()}",
         )
-    agreement, pairs = _rank_agreement(scored)
+    agreement, pairs = rank_agreement(scored)
     emit(
         "autotune/rank_agreement", 0.0,
         f"agreement={agreement:.2f} over {pairs} rankable pairs "
@@ -131,6 +115,23 @@ def run(tiny: bool = False, artifacts_dir: str | None = None) -> None:
         f"tuned/heuristic={ratio:.2f}x "
         + ("(tuned plan == heuristic plan)" if same_plan
            else f"knobs={state_t.eplan.knobs.describe()}"),
+    )
+
+    # drift verdict over the fit's own samples: a refit recommendation right
+    # after fitting means the model is broken on this host.  (Serving-time
+    # drift uses the tuned state's own monitor — run_pipeline feeds it —
+    # which stays separate because micro-run and pipeline latencies differ
+    # by a constant the residual monitor would misread as drift.)
+    monitor = DriftMonitor(min_points=min(4, len(scored)))
+    for pred, meas in scored:
+        monitor.observe(pred, meas)
+    d = monitor.summary()
+    emit(
+        "autotune/drift", 0.0,
+        f"refit_recommended={d['refit_recommended']} "
+        f"drift={d['drift']:.2f} (tol {d['rel_tol']}) "
+        f"rank={d['rank_agreement']:.2f}/{d['rankable_pairs']}p "
+        f"n={d['observations']}",
     )
 
     if artifacts_dir:

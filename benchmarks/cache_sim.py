@@ -24,6 +24,7 @@ from repro.cache.sram_cache import simulate
 from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
 from repro.data.synthetic import zipf_trace
+from repro.obs.traffic import cache_traffic, format_cache_traffic
 
 ALPHA = 1.05
 
@@ -49,13 +50,10 @@ def qr_cache_sweep(
     default_hit = 0.0
     for slots in slot_sweep:
         stats = simulate([q[t] for t in range(n_batches)], q_rows, slots)
-        tr = stats.traffic_bytes(row_bytes)
         tag = " (default)" if slots == default_slots else ""
         emit(
             f"cache_sim/qr_slots{slots}", 0.0,
-            f"hit={stats.hit_rate:.3f} staged/batch={stats.staged_per_batch:.0f} "
-            f"dram={tr['cached']}B vs baseline={tr['baseline']}B "
-            f"({tr['cached'] / tr['baseline']:.2f}x){tag}",
+            format_cache_traffic(cache_traffic(stats, row_bytes)) + tag,
         )
         if slots == default_slots:
             default_hit = stats.hit_rate
@@ -73,12 +71,10 @@ def tt_cache_sweep(
     i2, _v2, row_bytes = intra_gnr.subtable_traces(trace, cfg)["g2"]
     for slots in slot_sweep:
         stats = simulate([i2[t] for t in range(n_batches)], spec.v2, slots)
-        tr = stats.traffic_bytes(row_bytes)
         emit(
             f"cache_sim/tt_slots{slots}", 0.0,
-            f"hit={stats.hit_rate:.3f} staged/batch={stats.staged_per_batch:.0f} "
-            f"dram={tr['cached']}B vs baseline={tr['baseline']}B "
-            f"({tr['cached'] / tr['baseline']:.2f}x) v2={spec.v2}",
+            format_cache_traffic(cache_traffic(stats, row_bytes))
+            + f" v2={spec.v2}",
         )
 
 

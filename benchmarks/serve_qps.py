@@ -50,10 +50,18 @@ def run(tiny: bool = False) -> None:
             res = best[mode]
             qps[mode] = res["qps"]
             us_per_batch = res["wall_s"] * 1e6 / max(1, batches - 1)
+            tr = res["traffic"]
             emit(
                 f"serve_qps/{arch}_{mode}", us_per_batch,
-                f"qps={res['qps']:.1f} hit={res['hit_rate']:.3f} "
+                f"qps={res['qps']:.1f} "
+                f"p50={res['lat_p50_s'] * 1e3:.2f}ms "
+                f"p95={res['lat_p95_s'] * 1e3:.2f}ms "
+                f"p99={res['lat_p99_s'] * 1e3:.2f}ms "
+                f"compile={res['compile_s']:.2f}s "
+                f"hit={res['hit_rate']:.3f} "
                 f"staged/batch={res['staged_per_batch']:.1f} "
+                f"dram={tr['hbm_cached_bytes']}B/"
+                f"{tr['hbm_baseline_bytes']}B "
                 f"batch={batch} batches={batches} best_of={repeats}",
             )
         ratio = qps["overlap"] / max(qps["sequential"], 1e-9)

@@ -10,8 +10,7 @@ Public surface:
 * ``packed_tables``      — packed multi-table layout feeding the megakernel
   (one buffer / one index stream / one dispatch for every table's bag)
 * ``sharded_embedding``  — two-level shard_map partials (the PIM scheme on a
-  mesh): the kernel-level pieces ``repro.engine`` composes.  The legacy
-  ``build_*`` / ``cached_bag_lookup`` builders here are deprecated shims.
+  mesh): the kernel-level pieces ``repro.engine`` composes
 * ``overlap``            — compute/ICI overlap helpers
 
 The ProactivePIM cache subsystem (intra-GnR analyzer, prefetch scheduler,

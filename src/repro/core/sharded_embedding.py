@@ -17,15 +17,15 @@ Associativity of the ``add`` reconstruction is what legalizes all of this —
 exactly the paper's argument for why Q rows and R rows may live anywhere.
 
 All ``*_partial`` functions run **inside** ``shard_map`` and take local shards.
-They are the kernel-level pieces the engine (``repro.engine``) composes; the
-legacy ``build_*`` / ``cached_bag_lookup`` / ``gspmd_baseline_gnr`` builders
-are deprecated shims that delegate to the engine's plan/compile/execute API.
+They are the kernel-level pieces the engine (``repro.engine``) composes —
+every jitted GnR path is built through ``repro.engine``'s
+plan/compile/execute API (the deprecated ``build_*`` / ``cached_bag_lookup``
+shims were removed after their two-PR grace window; see CHANGES.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Sequence
 
 import jax
@@ -391,48 +391,6 @@ def packed_local_partial(
     return (out * scale[None, :, None]).astype(compute)
 
 
-# ---------------------------------------------------------------------------
-# deprecated builder shims — the engine (repro.engine) is the front door now.
-# Each emits a one-time DeprecationWarning and delegates; result parity with
-# the engine entries is asserted by tests/test_engine.py.
-# ---------------------------------------------------------------------------
-
-_DEPRECATED_WARNED: set[str] = set()
-
-
-def _warn_deprecated(name: str, replacement: str) -> None:
-    if name not in _DEPRECATED_WARNED:
-        _DEPRECATED_WARNED.add(name)
-        warnings.warn(
-            f"repro.core.sharded_embedding.{name} is deprecated; route through "
-            f"the engine API instead: {replacement}",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-
-
-def cached_bag_lookup(
-    params: dict,
-    idx: jax.Array,
-    bag: BagConfig,
-    *,
-    cache_rows: jax.Array | None = None,
-    slot: jax.Array | None = None,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """DEPRECATED: use ``EmbeddingEngine.cached_lookup`` (repro.engine)."""
-    _warn_deprecated(
-        "cached_bag_lookup",
-        "engine_for(EngineSpec.from_bags([bag])).cached_lookup(...)",
-    )
-    from repro import engine as _engine
-
-    eng = _engine.engine_for(_engine.EngineSpec.from_bags((bag,)))
-    return eng.cached_lookup(
-        params, idx, 0, cache_rows=cache_rows, slot=slot, interpret=interpret
-    )
-
-
 def make_dup_hot_tiers(tables: Sequence[dict], bags: Sequence[BagConfig], dup_plan):
     """Hot-tier arrays per table from a DuplicationPlan.
 
@@ -455,34 +413,6 @@ def make_dup_hot_tiers(tables: Sequence[dict], bags: Sequence[BagConfig], dup_pl
                 "hot_slot": jnp.asarray(tp.hot_plan.hot_slot, jnp.int32),
             })
     return tiers
-
-
-def build_dup_multi_bag_gnr(
-    mesh: Mesh,
-    bags: Sequence[BagConfig],
-    dup_plan,
-    *,
-    batch_axis: str = "data",
-    row_axis: str = "model",
-):
-    """DEPRECATED: use ``EmbeddingEngine.gnr`` with a duplication-carrying
-    plan (``engine.plan(spec, mesh, dup=dup_plan)``).
-
-    Returned fn keeps the legacy signature:
-    fn(tables, indices (B, T, pooling), hot_tiers) -> (B, T, dim).
-    """
-    _warn_deprecated(
-        "build_dup_multi_bag_gnr",
-        "compile(plan(EngineSpec.from_bags(bags, duplication=True), mesh, "
-        "dup=dup_plan)).gnr(mesh)",
-    )
-    from repro import engine as _engine
-
-    spec = _engine.EngineSpec.from_bags(
-        bags, duplication=True, batch_axis=batch_axis, row_axis=row_axis
-    )
-    eng = _engine.compile(_engine.plan(spec, mesh=mesh, dup=dup_plan))
-    return eng.gnr(mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -511,33 +441,6 @@ def shard_qr_params(
             pad_q_table(params["table"], cfg), NamedSharding(mesh, P(row_axis, None))
         )
     return out
-
-
-def build_multi_bag_gnr(
-    mesh: Mesh,
-    bags: Sequence[BagConfig],
-    *,
-    batch_axis: str = "data",
-    row_axis: str = "model",
-    hot: bool = False,
-):
-    """DEPRECATED: use ``EmbeddingEngine.gnr`` (repro.engine).
-
-    Returned fn keeps the legacy signature:
-        fn(tables: list[dict], indices: (B, T, pooling) int32,
-           hot_tiers: list[dict] | None) -> (B, T, dim)
-    """
-    _warn_deprecated(
-        "build_multi_bag_gnr",
-        "compile(plan(EngineSpec.from_bags(bags), mesh)).gnr(mesh, hot=hot)",
-    )
-    from repro import engine as _engine
-
-    spec = _engine.EngineSpec.from_bags(
-        bags, batch_axis=batch_axis, row_axis=row_axis
-    )
-    eng = _engine.compile(_engine.plan(spec, mesh=mesh))
-    return eng.gnr(mesh, hot=hot)
 
 
 def build_token_embed(
@@ -582,22 +485,6 @@ def build_token_embed(
         )(params, idx, tier)
 
     return fn
-
-
-def gspmd_baseline_gnr(mesh: Mesh, bags: Sequence[BagConfig], *, batch_axis="data",
-                       row_axis="model"):
-    """DEPRECATED: use ``EmbeddingEngine.baseline`` (repro.engine)."""
-    _warn_deprecated(
-        "gspmd_baseline_gnr",
-        "compile(plan(EngineSpec.from_bags(bags), mesh)).baseline(mesh)",
-    )
-    from repro import engine as _engine
-
-    spec = _engine.EngineSpec.from_bags(
-        bags, batch_axis=batch_axis, row_axis=row_axis
-    )
-    eng = _engine.compile(_engine.plan(spec, mesh=mesh))
-    return eng.baseline(mesh)
 
 
 def token_embed_inline(params: dict, idx: jax.Array, cfg: EmbeddingConfig,

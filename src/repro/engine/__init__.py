@@ -16,9 +16,9 @@ execute framing):
    packed megakernel, cached, per-table, or jnp-oracle backends with
    automatic fallback (CPU hosts, non-packable bag sets).
 
-Every first-party caller (``models/dlrm``, ``launch/serve_rec``,
-``launch/train``, the benchmarks, the examples) routes through this seam;
-the legacy ``sharded_embedding`` builders are deprecated shims over it.
+Every caller (``models/dlrm``, ``launch/serve_rec``, ``launch/train``, the
+benchmarks, the examples) routes through this seam — the legacy
+``sharded_embedding`` builder shims were removed in favor of it.
 
     spec   = EngineSpec.from_dlrm(cfg, serving=True)
     eplan  = engine.plan(spec, num_shards=4, trace=traces)

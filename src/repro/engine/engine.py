@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import embedding_bag, hashing, packed_tables
 from repro.core import sharded_embedding as SE
 from repro.distributed import jax_compat
@@ -75,6 +76,11 @@ class EmbeddingEngine:
         self.plan = plan
         self.spec = plan.spec
         self.bags = list(plan.spec.bags)
+        # telemetry: the active plan's summary rides along with any metrics
+        # snapshot taken while this engine serves (repro.obs is a no-op when
+        # disabled, so plain compiles pay nothing).
+        if obs.enabled():
+            obs.attach("engine_plan", plan.summary())
 
     # -- single-chip / training entry ----------------------------------------
 
@@ -87,6 +93,7 @@ class EmbeddingEngine:
         semantic loop.  This is the training entry: DLRM's forward and the
         engine parity/grad tests differentiate straight through it.
         """
+        obs.inc("engine/dispatch/lookup")
         if self.plan.packed:
             return packed_tables.packed_multi_bag_lookup(
                 tables, indices, self.bags, lengths=lengths,
@@ -117,6 +124,7 @@ class EmbeddingEngine:
         a loop.  Duplication-plan comm-free tables are served entirely from
         local replicas and skip the psum (the paper's communication kill).
         """
+        obs.inc("engine/dispatch/forward_partial")
         axis = axis or self.spec.row_axis
         nsh = num_shards or self.plan.num_shards
         bags = self.bags
@@ -205,6 +213,7 @@ class EmbeddingEngine:
         tables from local replicas (replicated in_specs, no psum); ``hot``
         adds hot-tier specs on plain plans.
         """
+        obs.inc("engine/dispatch/gnr_build")
         spec = self.spec
         row_axis, batch_axis = spec.row_axis, spec.batch_axis
         nsh = mesh.shape[row_axis]
@@ -243,6 +252,7 @@ class EmbeddingEngine:
         single-chip ``lookup``; otherwise the two-level ``forward_partial``
         under ``shard_map``.  Differentiable on both paths.
         """
+        obs.inc("engine/dispatch/inline_gnr")
         from repro.distributed import sharding as SH
 
         mesh = SH.current_mesh()
@@ -281,6 +291,7 @@ class EmbeddingEngine:
         ``cached_gather`` kernel; TT runs the fused TT bag kernel (outer
         cores already VMEM-pinned); hashed sets fall back to the plain bag.
         """
+        obs.inc("engine/dispatch/cached_lookup")
         from repro.kernels import ops
 
         bag = self.bags[table]
@@ -319,6 +330,7 @@ class EmbeddingEngine:
         """Concatenate per-table params into the packed megakernel buffers."""
         if not self.plan.packed:
             raise ValueError("plan is not packed; no packed buffers to build")
+        obs.inc("engine/dispatch/pack")
         return packed_tables.pack_params(tables, self.plan.layout)
 
     def serve_gather(self, packed, idx, slot, cache_rows):
@@ -332,6 +344,7 @@ class EmbeddingEngine:
         """
         if not self.plan.packed:
             raise ValueError("plan is not packed; serve_gather needs a layout")
+        obs.inc("engine/dispatch/serve_gather")
         return _serve_gather_jit(packed, idx, slot, cache_rows, self.plan)
 
     def packed_cache_rows(self, schedulers) -> "np.ndarray":
@@ -362,6 +375,7 @@ class EmbeddingEngine:
         XLA materializes all-gathers of table rows; benchmarks diff its
         collective bytes / wall-time against :meth:`gnr`.
         """
+        obs.inc("engine/dispatch/baseline_build")
         spec = self.spec
         bags = self.bags
 

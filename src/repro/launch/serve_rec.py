@@ -18,9 +18,21 @@ Steady-state loop over a queued request stream:
    blocks at the tail of the stream (``--mode sequential`` keeps the
    one-batch-at-a-time baseline for parity checks and speedup measurement).
 
+Telemetry (``repro.obs``): the warm-up batch that compiles gather + head is
+timed separately (``compile_s``) and excluded from the steady-state window;
+every steady-state batch records a latency sample, so results carry
+p50/p95/p99 instead of a single wall-clock number, plus the per-batch traffic
+accounting (cache hits, modeled HBM bytes, comm bytes killed by duplication).
+``--metrics-json`` dumps the full metric registry; ``--trace-out`` writes a
+Chrome-trace/Perfetto JSON of the stage spans (pack -> h2d -> dispatch ->
+device compute -> interact) — tracing fences each stage with
+``block_until_ready`` for honest durations, which serializes the overlap
+pipeline, so never compare a traced run's QPS against an untraced one.
+
 Usage (CPU smoke):
     PYTHONPATH=src python -m repro.launch.serve_rec --arch dlrm-qr --smoke
-    PYTHONPATH=src python -m repro.launch.serve_rec --arch dlrm-tt --tiny --json q.json
+    PYTHONPATH=src python -m repro.launch.serve_rec --arch dlrm-tt --tiny \
+        --metrics-json metrics.json --trace-out trace.json
 """
 
 from __future__ import annotations
@@ -37,10 +49,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine as engine_mod
+from repro import obs
 from repro.configs import registry
 from repro.data import synthetic
 from repro.engine import EngineSpec, big_rows, big_subtable  # noqa: F401 (re-export)
 from repro.models import dlrm
+from repro.obs import traffic as obs_traffic
 
 
 @dataclasses.dataclass
@@ -51,10 +65,16 @@ class ServeState:
 
     A thin view over the engine's ``EmbeddingPlan``: the legacy field names
     (``plan`` = the duplication plan, ``layout``, ``slot_budgets``, ...) are
-    kept for the benchmarks and tests that read them.
+    kept for the benchmarks and tests that read them.  When the plan came
+    from a fitted tuner, ``predicted_s`` carries the cost model's per-batch
+    latency prediction and ``drift`` accumulates predicted-vs-measured
+    residuals across every pipeline run on this state (the online
+    re-fit trigger).
     """
 
     engine: engine_mod.EmbeddingEngine
+    predicted_s: float | None = None
+    drift: obs.DriftMonitor | None = None
 
     @property
     def eplan(self) -> engine_mod.EmbeddingPlan:
@@ -97,7 +117,9 @@ def build_serve_state(cfg, *, shards: int, alpha: float, seed: int,
     ``tuner`` (a fitted ``repro.tune.Tuner``) or an explicit ``knobs`` routes
     the plan through the cost-model argmin instead of the heuristics; the
     serving pipeline needs the packed backend, so tuner choices are
-    constrained to it.
+    constrained to it.  A tuner also arms the drift monitor: its per-batch
+    latency prediction for the chosen knobs is compared against measured
+    batches while serving.
     """
     # per-table request streams: each sparse feature sees its own skew
     traces = [
@@ -107,10 +129,14 @@ def build_serve_state(cfg, *, shards: int, alpha: float, seed: int,
         for t in range(cfg.num_tables)
     ]
     spec = EngineSpec.from_dlrm(cfg, serving=True)
+    predicted_s = drift = None
     if knobs is None and tuner is not None:
         knobs = tuner.choose(spec, backend="packed")
+        predicted_s = tuner.predict(spec, knobs)
+        drift = obs.DriftMonitor()
     eplan = engine_mod.plan(spec, num_shards=shards, trace=traces, knobs=knobs)
-    return ServeState(engine=engine_mod.compile(eplan))
+    return ServeState(engine=engine_mod.compile(eplan),
+                      predicted_s=predicted_s, drift=drift)
 
 
 # Donate the consumed pooled buffer to the head on TPU (the double buffer's
@@ -134,7 +160,8 @@ def make_packed_gather(params, state: ServeState):
     hashable plan, so repeated sessions hit jax's compilation cache.
     """
     eng = state.engine
-    packed = eng.pack(params["tables"])
+    with obs.span("pack_tables", cat="offline"):
+        packed = eng.pack(params["tables"])
 
     def gather(idx, slot, cache_rows):
         return eng.serve_gather(packed, idx, slot, cache_rows)
@@ -142,10 +169,23 @@ def make_packed_gather(params, state: ServeState):
     return gather
 
 
+def _percentiles(lats: list[float]) -> dict:
+    if not lats:
+        return {"lat_p50_s": 0.0, "lat_p95_s": 0.0, "lat_p99_s": 0.0}
+    arr = np.asarray(lats)
+    return {
+        "lat_p50_s": float(np.percentile(arr, 50)),
+        "lat_p95_s": float(np.percentile(arr, 95)),
+        "lat_p99_s": float(np.percentile(arr, 99)),
+    }
+
+
 def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
                  shards: int = 4, seed: int = 0, mode: str = "overlap",
-                 state: ServeState | None = None, params=None) -> dict:
-    """Serve ``batches`` queued request batches; returns logits + measured QPS.
+                 state: ServeState | None = None, params=None,
+                 fence: bool = False) -> dict:
+    """Serve ``batches`` queued request batches; returns logits + measured QPS
+    + the per-batch latency distribution + the traffic accounting.
 
     ``mode="overlap"``: double-buffered — batch ``t+1``'s prefetch + packed
     gather are dispatched while batch ``t``'s interaction/MLP head runs, and
@@ -153,6 +193,14 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
     ``mode="sequential"``: the baseline — gather, head, block, every batch.
     Both modes produce identical logits (asserted by the tier-1 suite); the
     QPS difference is the pipeline win.
+
+    Batch 0 compiles gather + head; it is timed as ``compile_s`` and excluded
+    from the steady-state window — ``qps`` covers post-warm-up batches only.
+    Per-batch latency samples: sequential mode measures full request latency
+    (dispatch to synced logits); overlap mode measures the pipeline's batch
+    cycle time (the tail drain folds into the last sample).  ``fence=True``
+    (set by ``--trace-out``) syncs after every stage so the trace spans carry
+    device time — it serializes the overlap pipeline, perturbing QPS.
     """
     if params is None:
         params, _ = dlrm.init_dlrm(jax.random.PRNGKey(seed), cfg)
@@ -179,25 +227,46 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
         return _head_jit(params, dense, pooled, cfg)
 
     def prefetch(t: int) -> None:
-        for i in range(cfg.num_tables):
-            scheds[i].prefetch(rows_np[t][:, i])
+        with obs.span("prefetch", batch=t):
+            for i in range(cfg.num_tables):
+                scheds[i].prefetch(rows_np[t][:, i])
 
     def dispatch_gather(t: int):
         """Translate batch t through the slot maps and enqueue its megakernel."""
-        slot = np.stack(
-            [scheds[i].slots_for(rows_np[t][:, i]) for i in range(cfg.num_tables)],
-            axis=1,
-        )
-        cache_rows = state.engine.packed_cache_rows(scheds)
-        return gather(
-            jnp.asarray(idx_np[t]), jnp.asarray(slot), jnp.asarray(cache_rows)
-        )
+        with obs.span("pack", batch=t):        # host-side slot translation
+            slot = np.stack(
+                [scheds[i].slots_for(rows_np[t][:, i])
+                 for i in range(cfg.num_tables)],
+                axis=1,
+            )
+            cache_rows = state.engine.packed_cache_rows(scheds)
+        with obs.span("h2d", batch=t):         # host-to-device index upload
+            args = (jnp.asarray(idx_np[t]), jnp.asarray(slot),
+                    jnp.asarray(cache_rows))
+        with obs.span("dispatch", batch=t):    # megakernel enqueue
+            pooled = gather(*args)
+        if fence:
+            with obs.span("device_compute", batch=t):
+                jax.block_until_ready(pooled)
+        return pooled
+
+    def interact(t: int, pooled):
+        with obs.span("interact", batch=t):    # pairwise dot + MLP head
+            out = head(params, data[t]["dense"], pooled)
+        if fence:
+            with obs.span("device_head", batch=t):
+                jax.block_until_ready(out)
+        return out
 
     logits: list = [None] * batches
-    prefetch(0)                            # cold-start staging for batch 0
-    # warm-up: batch 0 compiles gather + head (excluded from steady-state QPS)
-    warm = head(params, data[0]["dense"], dispatch_gather(0))
-    jax.block_until_ready(warm)
+    lats: list[float] = []
+    # warm-up: batch 0 compiles gather + head — timed apart from steady state
+    tc = time.perf_counter()
+    with obs.span("compile_warmup", cat="offline"):
+        prefetch(0)                        # cold-start staging for batch 0
+        warm = interact(0, dispatch_gather(0))
+        jax.block_until_ready(warm)
+    compile_s = time.perf_counter() - tc
     logits[0] = np.asarray(warm)
 
     t0 = time.perf_counter()
@@ -205,45 +274,79 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
         if batches > 1:
             prefetch(1)
             pooled = dispatch_gather(1)
+        prev = time.perf_counter()
         for t in range(1, batches):
             # enqueue batch t's head, then stage + dispatch batch t+1's
             # gather while it runs; block only at the tail of the stream
-            out = head(params, data[t]["dense"], pooled)
-            if t + 1 < batches:
-                prefetch(t + 1)
-                pooled = dispatch_gather(t + 1)
-            logits[t] = out
-        jax.block_until_ready(logits[-1] if batches > 1 else warm)
+            with obs.span("batch", batch=t, mode=mode):
+                out = interact(t, pooled)
+                if t + 1 < batches:
+                    prefetch(t + 1)
+                    pooled = dispatch_gather(t + 1)
+                logits[t] = out
+            if t < batches - 1:            # cycle time: enqueue-to-enqueue
+                now = time.perf_counter()
+                lats.append(now - prev)
+                prev = now
+        with obs.span("tail_sync", mode=mode):
+            jax.block_until_ready(logits[-1] if batches > 1 else warm)
+        if batches > 1:                    # last cycle includes the drain
+            lats.append(time.perf_counter() - prev)
         logits = [np.asarray(x) for x in logits]
     elif mode == "sequential":
         for t in range(1, batches):
-            prefetch(t)
-            pooled = dispatch_gather(t)
-            out = head(params, data[t]["dense"], pooled)
-            jax.block_until_ready(out)     # per-batch sync: the baseline
+            tb = time.perf_counter()
+            with obs.span("batch", batch=t, mode=mode):
+                prefetch(t)
+                pooled = dispatch_gather(t)
+                out = interact(t, pooled)
+                with obs.span("block", batch=t):
+                    jax.block_until_ready(out)     # per-batch sync: the baseline
+            lats.append(time.perf_counter() - tb)
             logits[t] = np.asarray(out)
     else:
         raise ValueError(f"unknown mode {mode!r}")
     wall_s = time.perf_counter() - t0
+
+    for lat in lats:                       # the SLO histograms (when enabled)
+        obs.observe(f"serve/{mode}/batch_latency_s", lat)
+    obs.observe(f"serve/{mode}/compile_s", compile_s)
+    obs.inc(f"serve/{mode}/batches", len(lats))
+    obs.inc(f"serve/{mode}/requests", batch * len(lats))
+    if state.drift is not None and state.predicted_s is not None:
+        for lat in lats:
+            state.drift.observe(state.predicted_s, lat)
 
     served = batch * max(0, batches - 1)
     stats = [s.stats for s in scheds]
     hits = sum(s.hits for s in stats)
     acc = sum(s.accesses for s in stats)
     staged = sum(s.staged_rows for s in stats) / max(1, batches)
+    report = obs_traffic.collect(state.eplan, scheds, batch=batch)
+    if obs.enabled():
+        obs.trace_counter(f"serve/{mode}/hit_rate", hit_rate=report.hit_rate)
     return {
         "config": cfg.name,
         "mode": mode,
         "batch": batch,
         "batches": batches,
         "served": served,
+        "compile_s": compile_s,            # warm-up/compile, excluded from qps
         "wall_s": wall_s,
         "qps": served / max(wall_s, 1e-9),
+        **_percentiles(lats),
+        "latencies_s": lats,
         "hit_rate": hits / max(1, acc),
         "staged_per_batch": staged,
         "slot_budgets": list(state.slot_budgets),
+        "traffic": report.describe(),
+        "drift": state.drift.summary() if state.drift is not None else None,
         "logits": logits,
     }
+
+
+# result keys dropped from the --json / --metrics-json records (bulk arrays)
+_RECORD_DROP = ("logits", "latencies_s")
 
 
 def main(argv=None) -> int:
@@ -262,10 +365,21 @@ def main(argv=None) -> int:
     ap.add_argument("--mode", default="overlap",
                     choices=["overlap", "sequential", "both"])
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write measured QPS / hit-rate records as JSON")
+                    help="write measured QPS / latency / hit-rate records")
     ap.add_argument("--plan-json", default=None, metavar="PATH",
                     help="write the EmbeddingPlan summary as JSON (CI artifact)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable telemetry; write the metric registry "
+                         "(latency histograms, dispatch counters, traffic)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry; write a Chrome-trace JSON of the "
+                         "stage spans (fences every stage — perturbs overlap)")
     args = ap.parse_args(argv)
+
+    telemetry = bool(args.metrics_json or args.trace_out)
+    if telemetry:
+        obs.enable()
+    fence = bool(args.trace_out)
 
     name = f"{args.arch}-smoke" if (args.smoke or args.tiny) else args.arch
     cfg = registry.get_dlrm(name)
@@ -300,27 +414,52 @@ def main(argv=None) -> int:
         res = run_pipeline(
             cfg, batch=batch, batches=args.batches, alpha=args.alpha,
             shards=args.shards, seed=args.seed, mode=mode,
-            state=state, params=params,
+            state=state, params=params, fence=fence,
         )
+        tr = res["traffic"]
         ici = plan.ici_bytes_per_batch(batch, cfg.dim)
         print(
             f"[{mode}] served {res['served']} requests in {res['wall_s']:.2f}s "
-            f"-> {res['qps']:.1f} QPS (steady state, excl. compile batch)"
+            f"-> {res['qps']:.1f} QPS (steady state; compile/warm-up "
+            f"{res['compile_s']:.2f}s excluded)"
+        )
+        print(
+            f"[{mode}] batch latency p50={res['lat_p50_s'] * 1e3:.2f}ms "
+            f"p95={res['lat_p95_s'] * 1e3:.2f}ms "
+            f"p99={res['lat_p99_s'] * 1e3:.2f}ms over {len(res['latencies_s'])} "
+            f"batches"
         )
         print(
             f"[{mode}] cache hit rate {res['hit_rate']:.3f}, "
-            f"staged {res['staged_per_batch']:.1f} rows/batch"
+            f"staged {res['staged_per_batch']:.1f} rows/batch, "
+            f"HBM {tr['hbm_cached_bytes']}B vs baseline "
+            f"{tr['hbm_baseline_bytes']}B ({tr['hbm_reduction']:.2f}x)"
         )
         print(
             f"modeled combine traffic/batch: baseline {ici['baseline']:.0f} B -> "
             f"{ici['duplicated']:.0f} B (saved {ici['saved']:.0f} B)"
         )
         print("first logits:", np.asarray(res["logits"][-1][:4]).round(4).tolist())
-        records.append({k: v for k, v in res.items() if k != "logits"})
+        records.append({k: v for k, v in res.items() if k not in _RECORD_DROP})
     if args.json:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)
         print(f"# wrote {len(records)} records to {args.json}")
+    if args.metrics_json:
+        snap = obs.snapshot().to_json()
+        snap["config"] = cfg.name
+        snap["modes"] = {r["mode"]: r for r in records}
+        snap["plan"] = state.engine.summary()
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"# wrote metric registry to {args.metrics_json}")
+    if args.trace_out:
+        obs.tracer().write(
+            args.trace_out,
+            metadata={"config": cfg.name, "modes": modes, "fenced": fence},
+        )
+        print(f"# wrote Chrome trace to {args.trace_out} "
+              f"(load in chrome://tracing or ui.perfetto.dev)")
     return 0
 
 

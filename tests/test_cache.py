@@ -257,11 +257,13 @@ def test_dup_gnr_matches_oracle(mesh_runner):
     mesh_runner(
         """
 import numpy as np, jax, jax.numpy as jnp
+from repro import engine as E
 from repro.cache import duplication
 from repro.core import embedding_bag, placement, sharded_embedding as SE
 from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
 from repro.data.synthetic import zipf_trace
+from repro.engine import EngineSpec
 from repro.launch.mesh import make_mesh
 
 emb = EmbeddingConfig(vocab=4096, dim=32, kind="qr", collision=8,
@@ -276,7 +278,8 @@ mesh = make_mesh((2, 4), ("data", "model"))
 for budget in (32 * 2**20, 8192):   # comm-free and mixed regimes
     plan = duplication.plan_duplication(
         bags, [counts] * 2, num_shards=4, budget_bytes=budget)
-    fn = SE.build_dup_multi_bag_gnr(mesh, bags, plan)
+    spec = EngineSpec.from_bags(bags, duplication=True)
+    fn = E.compile(E.plan(spec, mesh=mesh, dup=plan)).gnr(mesh)
     tiers = SE.make_dup_hot_tiers(tables, bags, plan)
     out = fn(tables, idx, tiers)
     np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),

@@ -6,11 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import engine as E
 from repro.cache.sram_cache import PrefetchScheduler
 from repro.core.embedding_bag import BagConfig
 from repro.core.qr_embedding import EmbeddingConfig
-from repro.core import sharded_embedding as SE
 from repro.data.synthetic import zipf_trace
+from repro.engine import EngineSpec
 from repro.kernels import ops, ref
 
 
@@ -101,8 +102,9 @@ def test_cached_bag_lookup_matches_plain_bag():
         sched = PrefetchScheduler(nrows, 16)
         sched.prefetch(rows)
         slot = sched.slots_for(rows)
-        out = SE.cached_bag_lookup(
-            params, idx, bag,
+        eng = E.engine_for(EngineSpec.from_bags((bag,)))
+        out = eng.cached_lookup(
+            params, idx, 0,
             cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
         )
         expect = embedding_bag.bag_lookup(params, idx, bag)
@@ -124,7 +126,8 @@ def test_cached_bag_lookup_tt_kernel_parity():
 
     params = embedding_bag.init_tables(jax.random.PRNGKey(0), [bag])[0]
     idx = jax.random.randint(jax.random.PRNGKey(1), (5, 4), 0, 2048)
-    out = SE.cached_bag_lookup(params, idx, bag, cache_rows=None, slot=None)
+    eng = E.engine_for(EngineSpec.from_bags((bag,)))
+    out = eng.cached_lookup(params, idx, 0, cache_rows=None, slot=None)
     import dataclasses
 
     plain = embedding_bag.bag_lookup(

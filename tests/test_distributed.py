@@ -54,9 +54,11 @@ def test_two_level_gnr_matches_oracle(mesh_runner):
     mesh_runner(
         """
 import jax, jax.numpy as jnp, numpy as np
+from repro import engine as E
 from repro.core import sharded_embedding as SE, embedding_bag as EB, qr_embedding as QE
 from repro.core.qr_embedding import EmbeddingConfig
 from repro.core.embedding_bag import BagConfig
+from repro.engine import EngineSpec
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh((2, 4), ("data", "model"))
@@ -66,7 +68,8 @@ params = QE.init(jax.random.PRNGKey(0), cfg)
 idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 1024)
 oracle = EB.multi_bag_lookup([params, params], idx, [bag, bag])
 sp = SE.shard_qr_params(params, cfg, mesh)
-fn = SE.build_multi_bag_gnr(mesh, [bag, bag])
+spec = EngineSpec.from_bags((bag, bag))
+fn = E.compile(E.plan(spec, mesh=mesh)).gnr(mesh)
 out = fn([sp, sp], idx)
 np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-5, atol=1e-6)
 
@@ -85,12 +88,14 @@ def test_hot_tier_gnr_matches_oracle(mesh_runner):
     mesh_runner(
         """
 import jax, jax.numpy as jnp, numpy as np
+from repro import engine as E
 from repro.core import sharded_embedding as SE, embedding_bag as EB, qr_embedding as QE
 from repro.core import placement
 from repro.core.qr_embedding import EmbeddingConfig
 from repro.core.embedding_bag import BagConfig
 from repro.data.synthetic import zipf_trace
 from repro.core import hashing
+from repro.engine import EngineSpec
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh((2, 4), ("data", "model"))
@@ -112,7 +117,8 @@ sp = SE.shard_qr_params({"q": cold, "r": params["r"]}, cfg, mesh)
 
 idx = jax.random.randint(jax.random.PRNGKey(1), (8, 1, 4), 0, 4096)
 oracle = EB.multi_bag_lookup([params], idx, [bag])
-fn = SE.build_multi_bag_gnr(mesh, [bag], hot=True)
+spec = EngineSpec.from_bags((bag,))
+fn = E.compile(E.plan(spec, mesh=mesh)).gnr(mesh, hot=True)
 out = fn([sp], idx, [tier])
 np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-4, atol=1e-5)
 print("OK")

@@ -1,9 +1,8 @@
 """Engine front door (repro.engine): spec/plan hashability, parity of every
 engine entry with the legacy path it replaced — {dense, qr, tt} x {baseline,
-cached, dup, packed} x {single-chip, sharded} — gradients through the
-training entry, and the deprecation shims (warning + result parity)."""
-
-import warnings
+cached, dup, packed} x {single-chip, sharded} — and gradients through the
+training entry.  The legacy builder shims are removed; the suite asserts
+they stay gone."""
 
 import jax
 import jax.numpy as jnp
@@ -292,108 +291,15 @@ def test_engine_sharded_parity(kind, kw, mesh_runner):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims: one-time warning + result parity with the engine
+# legacy builder shims are gone: the engine is the only GnR front door
 # ---------------------------------------------------------------------------
 
-def _catch_deprecation():
-    SE._DEPRECATED_WARNED.clear()          # re-arm the warn-once latch
-    ctx = warnings.catch_warnings(record=True)
-    rec = ctx.__enter__()
-    warnings.simplefilter("always")
-    return ctx, rec
-
-
-def test_deprecated_cached_bag_lookup_warns_and_matches():
-    from repro.cache.sram_cache import PrefetchScheduler
-
-    bags = _bags("qr", num_tables=1, collision=8)
-    params = EB.init_tables(jax.random.PRNGKey(0), bags)[0]
-    idx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 1024))
-    _name, rows = E.big_subtable(bags[0].emb)
-    sched = PrefetchScheduler(rows, 8)
-    r = E.big_rows(idx, bags[0].emb)
-    sched.prefetch(r)
-    slot = sched.slots_for(r)
-
-    ctx, rec = _catch_deprecation()
-    try:
-        out = SE.cached_bag_lookup(
-            params, jnp.asarray(idx), bags[0],
-            cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
-        )
-        # warn-once: a second call must stay silent
-        before = len(rec)
-        SE.cached_bag_lookup(
-            params, jnp.asarray(idx), bags[0],
-            cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
-        )
-    finally:
-        ctx.__exit__(None, None, None)
-    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(deps) == 1 and "cached_bag_lookup" in str(deps[0].message)
-    assert "repro.core.sharded_embedding" in str(deps[0].message)
-    assert len([w for w in rec[before:]
-                if issubclass(w.category, DeprecationWarning)]) == 0
-
-    eng = E.engine_for(EngineSpec.from_bags(bags))
-    expect = eng.cached_lookup(
-        params, jnp.asarray(idx), 0,
-        cache_rows=jnp.asarray(sched.cache_rows()), slot=jnp.asarray(slot),
-    )
-    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
-                               rtol=1e-6, atol=1e-6)
-
-
-def test_deprecated_builders_warn_and_match():
-    from repro.launch.mesh import make_mesh
-
-    mesh = make_mesh((1, 1), ("data", "model"))
-    bags = _bags("qr", num_tables=2, collision=8)
-    tables = EB.init_tables(jax.random.PRNGKey(2), bags)
-    idx = jax.random.randint(jax.random.PRNGKey(3), (4, 2, 8), 0, 1024)
-    oracle = EB.multi_bag_lookup(tables, idx, bags)
-
-    ctx, rec = _catch_deprecation()
-    try:
-        fn = SE.build_multi_bag_gnr(mesh, bags)
-        base = SE.gspmd_baseline_gnr(mesh, bags)
-    finally:
-        ctx.__exit__(None, None, None)
-    msgs = [str(w.message) for w in rec
-            if issubclass(w.category, DeprecationWarning)]
-    assert any("build_multi_bag_gnr" in m for m in msgs)
-    assert any("gspmd_baseline_gnr" in m for m in msgs)
-    np.testing.assert_allclose(np.asarray(fn(tables, idx)), np.asarray(oracle),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(base(tables, idx)),
-                               np.asarray(oracle), rtol=1e-5, atol=1e-5)
-
-
-def test_deprecated_dup_builder_warns_and_matches():
-    from repro.cache import duplication
-    from repro.core import placement
-    from repro.launch.mesh import make_mesh
-
-    mesh = make_mesh((1, 1), ("data", "model"))
-    bags = _bags("qr", num_tables=2, collision=8)
-    tables = EB.init_tables(jax.random.PRNGKey(4), bags)
-    idx = jax.random.randint(jax.random.PRNGKey(5), (4, 2, 8), 0, 1024)
-    oracle = EB.multi_bag_lookup(tables, idx, bags)
-    counts = placement.profile_counts(zipf_trace(1024, 8000, seed=1), 1024)
-    dup = duplication.plan_duplication(
-        bags, [counts] * 2, num_shards=1, budget_bytes=1 << 24)
-
-    ctx, rec = _catch_deprecation()
-    try:
-        fn = SE.build_dup_multi_bag_gnr(mesh, bags, dup)
-    finally:
-        ctx.__exit__(None, None, None)
-    msgs = [str(w.message) for w in rec
-            if issubclass(w.category, DeprecationWarning)]
-    assert any("build_dup_multi_bag_gnr" in m for m in msgs)
-    tiers = SE.make_dup_hot_tiers(tables, bags, dup)
-    np.testing.assert_allclose(np.asarray(fn(tables, idx, tiers)),
-                               np.asarray(oracle), rtol=1e-5, atol=1e-5)
+def test_legacy_builder_shims_removed():
+    """The PR-5 deprecation shims completed their grace window and were
+    removed — importing them must fail so stale callers break loudly."""
+    for name in ("build_multi_bag_gnr", "build_dup_multi_bag_gnr",
+                 "cached_bag_lookup", "gspmd_baseline_gnr"):
+        assert not hasattr(SE, name), f"shim {name} resurrected"
 
 
 # ---------------------------------------------------------------------------
