@@ -7,16 +7,22 @@ carry per-row host metadata (``benchmarks.common.run_metadata``).  The gate:
 
 * every baseline row name must appear in the measured run (a vanished row
   means a suite silently stopped covering something) — always fatal;
-* timed rows (``us_per_call > 0``) must not regress beyond ``--rel-tol``.
-  Wall-clock across CI hosts is noisy, so the default tolerance is generous
-  (3.0 = 4x slower fails): the gate catches order-of-magnitude regressions
-  and structural breakage, not scheduler jitter.  When the measured run's
-  ``device_kind``/``backend`` differ from the baseline's, timing rows are
-  reported but not gated (cross-machine comparison is meaningless).
+* timed rows where BOTH sides carry raw per-batch latency samples
+  (``samples_s``, written by ``benchmarks.common.emit(..., samples=)``) get
+  the **noise-aware gate**: a bootstrap confidence interval on the ratio of
+  median latencies.  A regression needs the whole 95% CI above
+  ``1 + --boot-tol`` — one jittery batch cannot fail the gate, but a
+  consistent shift well inside the old 3x backstop can;
+* timed rows without samples fall back to the point-ratio gate at
+  ``--rel-tol``; the point-ratio **3x hard backstop always applies** even to
+  sampled rows (a 4x median shift fails regardless of CI politics).
+  When the measured run's ``device_kind``/``backend`` differ from the
+  baseline's, timing rows are reported but not gated (cross-machine
+  comparison is meaningless) — unchanged.
 
 CLI: ``python -m benchmarks.baseline --measured out.json --baseline
-benchmarks/baselines/BENCH_serve_qps.json [--rel-tol 3.0]`` — exit 1 on
-missing rows or gated regressions.
+benchmarks/baselines/BENCH_serve_qps.json [--rel-tol 3.0] [--boot-tol 0.5]``
+— exit 1 on missing rows or gated regressions.
 """
 
 from __future__ import annotations
@@ -24,6 +30,13 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+import numpy as np
+
+# resampling depth for the CI; deterministic seed so the gate is reproducible
+N_BOOT = 2000
+BOOT_SEED = 0
+MIN_SAMPLES = 4                      # below this a CI is meaningless
 
 
 def _rows(path: str) -> list[dict]:
@@ -41,15 +54,45 @@ def _host(records: list[dict]) -> tuple[str, str]:
     return "unknown", "unknown"
 
 
+def bootstrap_ratio_ci(base_samples, meas_samples, *, n_boot: int = N_BOOT,
+                       alpha: float = 0.05, seed: int = BOOT_SEED
+                       ) -> tuple[float, float]:
+    """Percentile-bootstrap CI for median(measured)/median(baseline).
+
+    Resamples each side independently with replacement; deterministic
+    (seeded) so the gate verdict is reproducible run-to-run.
+    """
+    rng = np.random.default_rng(seed)
+    b = np.asarray(base_samples, dtype=np.float64)
+    m = np.asarray(meas_samples, dtype=np.float64)
+    bi = rng.integers(0, b.size, size=(n_boot, b.size))
+    mi = rng.integers(0, m.size, size=(n_boot, m.size))
+    ratios = np.median(m[mi], axis=1) / np.maximum(
+        np.median(b[bi], axis=1), 1e-12
+    )
+    lo, hi = np.quantile(ratios, [alpha / 2.0, 1.0 - alpha / 2.0])
+    return float(lo), float(hi)
+
+
+def _samples(row: dict) -> np.ndarray | None:
+    s = row.get("samples_s")
+    if not s or len(s) < MIN_SAMPLES:
+        return None
+    return np.asarray(s, dtype=np.float64)
+
+
 def compare(measured: list[dict], baseline: list[dict], *, rel_tol: float,
-            gate_timing: bool = True) -> dict:
+            gate_timing: bool = True, boot_tol: float = 0.5) -> dict:
     """Diff measured rows against baseline rows (keyed by name).
 
     Returns {"missing": [...], "regressions": [(name, base_us, meas_us,
-    ratio)], "improvements": [...], "checked": n}.
+    ratio)], "improvements": [...], "checked": n, "detail": {name: {...}}}.
+    ``detail`` records per-row gate method ("point" or "bootstrap") and the
+    CI for sampled rows.
     """
     got = {r["name"]: r for r in measured}
     missing, regressions, improvements = [], [], []
+    detail: dict = {}
     checked = 0
     for b in baseline:
         name = b["name"]
@@ -62,9 +105,21 @@ def compare(measured: list[dict], baseline: list[dict], *, rel_tol: float,
             continue                        # modeled/ratio rows: presence only
         checked += 1
         ratio = meas_us / base_us
-        if ratio > 1.0 + rel_tol:
+        bs, ms = _samples(b), _samples(m)
+        if bs is not None and ms is not None:
+            lo, hi = bootstrap_ratio_ci(bs, ms)
+            detail[name] = {"method": "bootstrap", "ci": (lo, hi),
+                            "ratio": ratio}
+            # significant-and-large shift, OR the hard point backstop
+            regress = lo > 1.0 + boot_tol or ratio > 1.0 + rel_tol
+            improve = hi < 1.0 / (1.0 + boot_tol)
+        else:
+            detail[name] = {"method": "point", "ratio": ratio}
+            regress = ratio > 1.0 + rel_tol
+            improve = ratio < 1.0 / (1.0 + rel_tol)
+        if regress:
             regressions.append((name, base_us, meas_us, ratio))
-        elif ratio < 1.0 / (1.0 + rel_tol):
+        elif improve:
             improvements.append((name, base_us, meas_us, ratio))
     if not gate_timing:
         regressions = []
@@ -73,6 +128,7 @@ def compare(measured: list[dict], baseline: list[dict], *, rel_tol: float,
         "regressions": regressions,
         "improvements": improvements,
         "checked": checked,
+        "detail": detail,
     }
 
 
@@ -81,7 +137,12 @@ def main(argv=None) -> int:
     ap.add_argument("--measured", required=True)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--rel-tol", type=float, default=3.0,
-                    help="gate: measured > baseline*(1+tol) fails (default 3.0)")
+                    help="point gate + hard backstop: measured > "
+                         "baseline*(1+tol) fails (default 3.0)")
+    ap.add_argument("--boot-tol", type=float, default=0.5,
+                    help="bootstrap gate (sampled rows): fail when the whole "
+                         "95%% CI of the median ratio sits above 1+tol "
+                         "(default 0.5)")
     ap.add_argument("--force-timing", action="store_true",
                     help="gate timings even across differing host metadata")
     args = ap.parse_args(argv)
@@ -97,16 +158,30 @@ def main(argv=None) -> int:
                  else "timing informational only"))
 
     res = compare(measured, baseline, rel_tol=args.rel_tol,
-                  gate_timing=gate_timing)
+                  gate_timing=gate_timing, boot_tol=args.boot_tol)
+
+    def _ci(name: str) -> str:
+        d = res["detail"].get(name, {})
+        if d.get("method") == "bootstrap":
+            lo, hi = d["ci"]
+            return f" [median-ratio CI {lo:.2f}..{hi:.2f}]"
+        return ""
+
     for name in res["missing"]:
         print(f"MISSING  {name}")
     for name, base, meas, ratio in res["regressions"]:
-        print(f"REGRESS  {name}: {base:.1f}us -> {meas:.1f}us ({ratio:.2f}x)")
+        print(f"REGRESS  {name}: {base:.1f}us -> {meas:.1f}us "
+              f"({ratio:.2f}x){_ci(name)}")
     for name, base, meas, ratio in res["improvements"]:
-        print(f"IMPROVE  {name}: {base:.1f}us -> {meas:.1f}us ({ratio:.2f}x)")
+        print(f"IMPROVE  {name}: {base:.1f}us -> {meas:.1f}us "
+              f"({ratio:.2f}x){_ci(name)}")
+    n_boot_rows = sum(
+        1 for d in res["detail"].values() if d["method"] == "bootstrap"
+    )
     print(f"# {res['checked']} timed rows checked against "
           f"{len(baseline)} baseline rows "
-          f"(tol {args.rel_tol}, gate_timing={gate_timing})")
+          f"({n_boot_rows} bootstrap-gated, boot_tol {args.boot_tol}, "
+          f"point tol {args.rel_tol}, gate_timing={gate_timing})")
     if res["missing"] or res["regressions"]:
         return 1
     print("# baseline gate passed")

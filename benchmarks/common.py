@@ -8,7 +8,7 @@ import time
 
 import jax
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[tuple[str, float, str, list | None]] = []
 
 
 @functools.lru_cache(maxsize=1)
@@ -21,18 +21,26 @@ def run_metadata() -> dict:
     return dict(_meta())
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str = "",
+         samples: list | None = None) -> None:
+    """Record one benchmark row.  ``samples`` (per-batch latency seconds)
+    rides along into the JSON artifact as ``samples_s`` so the baseline gate
+    can bootstrap a confidence interval instead of comparing two points."""
+    ROWS.append((name, us_per_call, derived,
+                 [float(s) for s in samples] if samples else None))
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
 def write_json(path: str) -> None:
     """Dump every emitted row as machine-readable JSON (perf-trajectory
     tracking across PRs: stable keys, one record per ``emit``, each stamped
-    with the host/backend metadata)."""
+    with the host/backend metadata and, for serving rows, the raw latency
+    samples the noise-aware gate resamples)."""
     meta = run_metadata()
     records = [
-        {"name": n, "us_per_call": u, "derived": d, **meta} for n, u, d in ROWS
+        {"name": n, "us_per_call": u, "derived": d, **meta,
+         **({"samples_s": s} if s else {})}
+        for n, u, d, s in ROWS
     ]
     with open(path, "w") as f:
         json.dump(records, f, indent=1)

@@ -15,6 +15,12 @@ step-time estimate = max(terms) (perfect-overlap roofline);
   MFU_model  = MODEL_FLOPS / chips / peak / step_time   (useful-work MFU)
   roofline fraction = compute_term / step_time          (1.0 = compute-bound)
 
+The compute/memory/collective -> seconds conversion routes through
+``repro.obs.attribution.model_terms`` — the SAME pricing the serving
+attribution table uses — and every cell's terms are also written in the
+``stage-attribution/v1`` row schema (``experiments/roofline_rows.json``), so
+dry-run rooflines and serving reports join on one vocabulary.
+
 Methodology caveats recorded in EXPERIMENTS.md: the HLO comes from the CPU
 backend (fp32-promoted dots, different fusion choices than TPU), so absolute
 terms are conservative; comparisons across variants of the same cell are
@@ -31,6 +37,7 @@ from benchmarks.common import emit
 from repro.launch.mesh import (
     DCN_BW, HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
 )
+from repro.obs import attribution as obs_attribution
 
 ICI_BW = 2 * ICI_BW_PER_LINK     # bidirectional ring on one torus dimension
 
@@ -50,31 +57,28 @@ def terms(rec: dict) -> dict | None:
         return None
     h = rec["hlo"]
     chips = rec["chips"]
-    compute = h["flops"] / PEAK_FLOPS_BF16
-    memory = h["bytes"] / HBM_BW
     wire = h["coll_wire_total"]
+    wire_bw = ICI_BW
     if rec["mesh"] == "pod2":
         # group-size==2 collectives ride DCN (the pod axis); approximate the
         # split by attributing all-reduce wire with g==2 proportionally.
         dcn_share = 0.0
-        collective = wire * (1 - dcn_share) / ICI_BW + wire * dcn_share / DCN_BW
-    else:
-        collective = wire / ICI_BW
-    step = max(compute, memory, collective, 1e-12)
-    dom = max(
-        ("compute", compute), ("memory", memory), ("collective", collective),
-        key=lambda kv: kv[1],
-    )[0]
+        if dcn_share > 0:
+            wire_bw = 1.0 / ((1 - dcn_share) / ICI_BW + dcn_share / DCN_BW)
+    # bytes/flops -> seconds via the shared serving-attribution pricing
+    t = obs_attribution.model_terms(
+        flops=h["flops"], hbm_bytes=h["bytes"], wire_bytes=wire,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, wire_bw=wire_bw,
+    )
+    step = t["step_s"]
     mfu = rec["model_flops"] / chips / PEAK_FLOPS_BF16 / step
     return {
-        "compute_s": compute,
-        "memory_s": memory,
-        "collective_s": collective,
-        "step_s": step,
-        "dominant": dom,
+        **t,
         "mfu_model": mfu,
-        "roofline_fraction": compute / step,
+        "roofline_fraction": t["compute_s"] / step,
         "useful_flops_ratio": rec["model_flops"] / chips / max(h["flops"], 1.0),
+        "_hbm_bytes": h["bytes"],
+        "_wire_bytes": wire,
     }
 
 
@@ -122,6 +126,7 @@ def run() -> None:
     ok = [r for r in recs if r.get("status") == "run"]
     emit("roofline/cells_compiled", 0.0, f"{len(ok)} run records loaded")
     doms = {}
+    cells = []
     for r in ok:
         t = terms(r)
         if t:
@@ -133,6 +138,17 @@ def run() -> None:
                 f"x={t['collective_s']:.3f}s mfu={t['mfu_model']:.3f} "
                 f"useful={t['useful_flops_ratio']:.2f}",
             )
+            # the same terms in the serving-attribution row schema
+            cells.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "embedding": r.get("embedding"),
+                "schema": obs_attribution.SCHEMA,
+                "dominant": t["dominant"],
+                "step_s": t["step_s"],
+                "rows": obs_attribution.term_rows(
+                    t, hbm_bytes=t["_hbm_bytes"], wire_bytes=t["_wire_bytes"],
+                ),
+            })
     emit("roofline/dominant_histogram", 0.0, str(doms))
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/roofline.md", "w") as f:
@@ -140,3 +156,8 @@ def run() -> None:
         f.write(table(recs))
         f.write("\n")
     emit("roofline/table_written", 0.0, "experiments/roofline.md")
+    with open("experiments/roofline_rows.json", "w") as f:
+        json.dump(cells, f, indent=1)
+    emit("roofline/rows_written", 0.0,
+         f"experiments/roofline_rows.json ({len(cells)} cells, "
+         f"{obs_attribution.SCHEMA})")

@@ -13,6 +13,18 @@ steady-state QPS — the cross-PR perf trajectory the BENCH JSON artifacts
 track (earlier PRs only recorded modeled traffic).  The overlap/sequential
 ratio is the double-buffering win; parity of the two modes' logits is
 asserted by the tier-1 suite (`tests/test_packed_tables.py`).
+
+Observatory columns (informational, never a gate):
+
+* per-mode ``burn=`` — the slow-window burn rate against a derived SLO of
+  2x the *sequential* p50 (so the overlap pipeline's distribution is judged
+  against the baseline's median, on any host);
+* a ``_bottleneck`` row per arch from one extra **fenced** overlap run put
+  through the per-stage attribution join (fenced runs serialize the
+  pipeline, so only the stage verdict is reported — never its QPS);
+* the raw per-batch latency samples ride into the JSON rows (``samples_s``)
+  so ``benchmarks/baseline.py`` can bootstrap a CI instead of comparing two
+  points.
 """
 
 from __future__ import annotations
@@ -23,9 +35,11 @@ from benchmarks.common import emit
 def run(tiny: bool = False) -> None:
     import jax
 
+    from repro import obs
     from repro.configs import registry
     from repro.launch import serve_rec
     from repro.models import dlrm
+    from repro.obs import attribution as obs_attribution
 
     # smoke-sized tables on CPU hosts; batch/batches set the measured load.
     # Wall-clock on shared CI hosts is noisy at this scale, so each mode is
@@ -45,24 +59,37 @@ def run(tiny: bool = False) -> None:
                 )
                 if mode not in best or res["wall_s"] < best[mode]["wall_s"]:
                     best[mode] = res
+        # derived SLO: 2x the sequential-mode median — a host-relative target,
+        # so the burn column means the same thing on a laptop and in CI
+        slo_target = 2.0 * best["sequential"]["lat_p50_s"]
         qps = {}
         for mode in ("sequential", "overlap"):
             res = best[mode]
             qps[mode] = res["qps"]
             us_per_batch = res["wall_s"] * 1e6 / max(1, batches - 1)
             tr = res["traffic"]
+            n = len(res["latencies_s"])
+            eng = obs.SLOEngine(obs.SLOSpec(
+                name=f"{arch}-{mode}", p99_latency_s=slo_target,
+                fast_window=max(1, n // 2), slow_window=max(1, n),
+            ))
+            for lat in res["latencies_s"]:
+                eng.observe(lat)
             emit(
                 f"serve_qps/{arch}_{mode}", us_per_batch,
                 f"qps={res['qps']:.1f} "
                 f"p50={res['lat_p50_s'] * 1e3:.2f}ms "
                 f"p95={res['lat_p95_s'] * 1e3:.2f}ms "
                 f"p99={res['lat_p99_s'] * 1e3:.2f}ms "
+                f"burn={eng.burn_rate(eng.spec.slow_window):.2f}x"
+                f"@{slo_target * 1e3:.2f}ms "
                 f"compile={res['compile_s']:.2f}s "
                 f"hit={res['hit_rate']:.3f} "
                 f"staged/batch={res['staged_per_batch']:.1f} "
                 f"dram={tr['hbm_cached_bytes']}B/"
                 f"{tr['hbm_baseline_bytes']}B "
                 f"batch={batch} batches={batches} best_of={repeats}",
+                samples=res["latencies_s"],
             )
         ratio = qps["overlap"] / max(qps["sequential"], 1e-9)
         emit(
@@ -70,3 +97,26 @@ def run(tiny: bool = False) -> None:
             f"overlap/sequential={ratio:.2f}x "
             f"({qps['overlap']:.1f} vs {qps['sequential']:.1f} QPS)",
         )
+        # bottleneck verdict from ONE fenced run (device-honest spans; the
+        # fencing serializes the pipeline, so its QPS is never emitted)
+        obs.enable()
+        fres = serve_rec.run_pipeline(
+            cfg, batch=batch, batches=batches, mode="overlap",
+            state=state, params=params, fence=True,
+        )
+        att = obs_attribution.attribute(
+            obs.tracer().events, fres["traffic_report"], state.eplan,
+            batch=batch, fenced=True,
+        )
+        obs.disable()
+        bn = next((r for r in att.rows if r.stage == att.bottleneck), None)
+        detail = f"stage={att.bottleneck}"
+        if bn is not None:
+            if bn.share is not None:
+                detail += f" share={bn.share * 100:.1f}%"
+            if bn.achieved_gbps is not None:
+                detail += f" achieved={bn.achieved_gbps:.2f}GB/s"
+            if bn.modeled_gbps is not None:
+                detail += f" modeled={bn.modeled_gbps:.2f}GB/s"
+        detail += " fenced=1"
+        emit(f"serve_qps/{arch}_bottleneck", 0.0, detail)

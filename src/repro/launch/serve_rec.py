@@ -54,6 +54,8 @@ from repro.configs import registry
 from repro.data import synthetic
 from repro.engine import EngineSpec, big_rows, big_subtable  # noqa: F401 (re-export)
 from repro.models import dlrm
+from repro.obs import attribution as obs_attribution
+from repro.obs import report as obs_report
 from repro.obs import traffic as obs_traffic
 
 
@@ -169,15 +171,10 @@ def make_packed_gather(params, state: ServeState):
     return gather
 
 
-def _percentiles(lats: list[float]) -> dict:
-    if not lats:
-        return {"lat_p50_s": 0.0, "lat_p95_s": 0.0, "lat_p99_s": 0.0}
-    arr = np.asarray(lats)
-    return {
-        "lat_p50_s": float(np.percentile(arr, 50)),
-        "lat_p95_s": float(np.percentile(arr, 95)),
-        "lat_p99_s": float(np.percentile(arr, 99)),
-    }
+# serving-record percentiles come from the same exact-quantile helper the
+# obs histograms use (obs.metrics.exact_percentile) — one definition, so a
+# metrics snapshot and a result record can never disagree.
+_percentiles = obs.latency_percentiles
 
 
 def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
@@ -288,10 +285,13 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
                 now = time.perf_counter()
                 lats.append(now - prev)
                 prev = now
+                obs.observe_batch(batch=t, mode=mode, latency_s=lats[-1])
         with obs.span("tail_sync", mode=mode):
             jax.block_until_ready(logits[-1] if batches > 1 else warm)
         if batches > 1:                    # last cycle includes the drain
             lats.append(time.perf_counter() - prev)
+            obs.observe_batch(batch=batches - 1, mode=mode,
+                              latency_s=lats[-1])
         logits = [np.asarray(x) for x in logits]
     elif mode == "sequential":
         for t in range(1, batches):
@@ -304,6 +304,7 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
                     jax.block_until_ready(out)     # per-batch sync: the baseline
             lats.append(time.perf_counter() - tb)
             logits[t] = np.asarray(out)
+            obs.observe_batch(batch=t, mode=mode, latency_s=lats[-1])
     else:
         raise ValueError(f"unknown mode {mode!r}")
     wall_s = time.perf_counter() - t0
@@ -340,13 +341,15 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
         "staged_per_batch": staged,
         "slot_budgets": list(state.slot_budgets),
         "traffic": report.describe(),
+        "traffic_report": report,          # the live object (attribution joins)
         "drift": state.drift.summary() if state.drift is not None else None,
         "logits": logits,
     }
 
 
-# result keys dropped from the --json / --metrics-json records (bulk arrays)
-_RECORD_DROP = ("logits", "latencies_s")
+# result keys dropped from the --json / --metrics-json records (bulk arrays
+# and live objects)
+_RECORD_DROP = ("logits", "latencies_s", "traffic_report")
 
 
 def main(argv=None) -> int:
@@ -374,12 +377,35 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable telemetry; write a Chrome-trace JSON of the "
                          "stage spans (fences every stage — perturbs overlap)")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="serving SLO, e.g. 'p99_ms=50,hit=0.5,qps=100,"
+                         "objective=0.99' — enables telemetry, burn-rate "
+                         "alerts, and the flight recorder")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the serving-report artifact (markdown + JSON "
+                         "twin): SLO state, per-stage attribution, traffic. "
+                         "Enables telemetry and fences stages like --trace-out")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="directory for flight-recorder JSON dumps (written "
+                         "when an SLO burns or a latency sample is anomalous)")
     args = ap.parse_args(argv)
 
-    telemetry = bool(args.metrics_json or args.trace_out)
+    telemetry = bool(args.metrics_json or args.trace_out or args.slo
+                     or args.report or args.flight_dir)
     if telemetry:
         obs.enable()
-    fence = bool(args.trace_out)
+    # --report needs device-honest stage durations for attribution, so it
+    # fences like --trace-out (and carries the same QPS caveat).
+    fence = bool(args.trace_out or args.report)
+
+    slo_engine = recorder = None
+    if args.slo:
+        slo_engine = obs.SLOEngine(obs.SLOSpec.parse(args.slo))
+    if args.slo or args.flight_dir or args.report:
+        recorder = obs.FlightRecorder(out_dir=args.flight_dir)
+    if slo_engine is not None or recorder is not None:
+        # after enable(): the telemetry join cursors into the live registry
+        obs.install_observatory(slo=slo_engine, recorder=recorder)
 
     name = f"{args.arch}-smoke" if (args.smoke or args.tiny) else args.arch
     cfg = registry.get_dlrm(name)
@@ -441,6 +467,49 @@ def main(argv=None) -> int:
         )
         print("first logits:", np.asarray(res["logits"][-1][:4]).round(4).tolist())
         records.append({k: v for k, v in res.items() if k not in _RECORD_DROP})
+
+    # -- observatory epilogue: SLO verdict, attribution, serving report -------
+    if slo_engine is not None:
+        floors = slo_engine.finalize(hit_rate=res["hit_rate"], qps=res["qps"])
+        verdict = "BREACHED" if slo_engine.breached else "met"
+        print(
+            f"[slo] {slo_engine.spec.name}: {verdict} — "
+            f"{slo_engine.bad_total}/{slo_engine.n} bad batches, "
+            f"budget remaining {slo_engine.budget_remaining_frac * 100:.1f}%, "
+            f"{len(slo_engine.alerts)} alerts"
+        )
+        for fname, f in floors.items():
+            print(f"[slo] {fname} floor {f['floor']}: measured "
+                  f"{f['measured']:.3f} — "
+                  f"{'BREACHED' if f['breached'] else 'met'}")
+    if recorder is not None and recorder.dumps:
+        for d in recorder.dumps:
+            print(f"[flight] dumped {d['records']} records "
+                  f"({d['reason']}) -> {d.get('path', '<memory>')}")
+    if args.report:
+        att = obs_attribution.attribute(
+            obs.tracer().events, res["traffic_report"], state.eplan,
+            batch=batch, fenced=fence,
+        )
+        print(f"[attribution] bottleneck stage: {att.bottleneck} "
+              f"(measured {att.total_s * 1e3:.2f} ms/batch, "
+              f"cost model {att.modeled_total_s() * 1e3:.2f} ms/batch)")
+        rep = obs_report.build(
+            snapshot=obs.snapshot(),
+            slo_state=slo_engine.state() if slo_engine is not None else None,
+            attribution=att,
+            traffic=res["traffic"],
+            results={r["mode"]: r for r in records},
+            flight_dumps=recorder.dumps if recorder is not None else None,
+            meta={
+                "config": cfg.name, "batch": batch, "batches": args.batches,
+                "shards": args.shards, "alpha": args.alpha,
+                "seed": args.seed, "modes": modes, "fenced": fence,
+            },
+        )
+        md_path, jpath = obs_report.write(rep, args.report, attribution=att)
+        print(f"# wrote serving report to {md_path} (+ {jpath})")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)

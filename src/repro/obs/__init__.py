@@ -23,21 +23,29 @@ the engine instruments the dispatch sites.
 
 Submodules: ``metrics`` (counters/gauges/log-bucket histograms + mergeable
 snapshots), ``tracer`` (Chrome-trace spans), ``traffic`` (per-batch HBM/comm
-byte accounting), ``drift`` (cost-model residual monitoring).
+byte accounting), ``drift`` (cost-model residual monitoring), plus the
+observatory decision layer: ``slo`` (error budgets + multi-window burn-rate
+alerts), ``recorder`` (anomaly flight recorder), ``attribution`` (per-stage
+roofline attribution), ``report`` (the serving-report artifact).
 """
 
 from __future__ import annotations
 
 from repro.obs.metrics import (  # noqa: F401 (re-exports)
     Counter, Gauge, Histogram, HistogramSnapshot, MetricRegistry,
-    RegistrySnapshot,
+    RegistrySnapshot, latency_percentiles,
 )
 from repro.obs.tracer import Tracer
 from repro.obs.drift import DriftMonitor, rank_agreement  # noqa: F401
+from repro.obs.slo import SLOEngine, SLOSpec  # noqa: F401
+from repro.obs.recorder import (  # noqa: F401
+    BatchRecord, FlightRecorder, Observatory, TelemetryJoin,
+)
 
 _enabled = False
 _registry = MetricRegistry()
 _tracer = Tracer()
+_observatory: Observatory | None = None
 
 
 class _NullSpan:
@@ -121,3 +129,40 @@ def trace_counter(name: str, **values) -> None:
 
 def snapshot() -> RegistrySnapshot:
     return _registry.snapshot()
+
+
+# -- observatory: SLO + flight recorder, driven per steady-state batch --------
+
+def install_observatory(*, slo: SLOEngine | None = None,
+                        recorder: FlightRecorder | None = None
+                        ) -> Observatory | None:
+    """Install (or clear, with no arguments) the process observatory.
+
+    Call AFTER :func:`enable` — the telemetry join keeps cursors into the
+    live tracer/registry, so a later ``enable(reset=True)`` invalidates it.
+    """
+    global _observatory
+    if slo is None and recorder is None:
+        _observatory = None
+        return None
+    _observatory = Observatory(
+        slo=slo, recorder=recorder,
+        join=TelemetryJoin(_tracer, _registry),
+    )
+    return _observatory
+
+
+def observatory() -> Observatory | None:
+    return _observatory
+
+
+def observe_batch(*, batch: int, mode: str, latency_s: float,
+                  traffic: dict | None = None) -> dict | None:
+    """Facade for the serving loop: one bool check when telemetry is off (or
+    no observatory is installed); otherwise feeds the SLO engine + flight
+    recorder and returns ``{"record", "alerts", "dump"}``."""
+    if _enabled and _observatory is not None:
+        return _observatory.observe_batch(
+            batch=batch, mode=mode, latency_s=latency_s, traffic=traffic,
+        )
+    return None

@@ -46,6 +46,25 @@ def log_bounds(
     return lo * 10.0 ** (np.arange(n + 1) / per_decade)
 
 
+def exact_percentile(samples, q: float) -> float:
+    """THE exact-quantile definition every serving number in this repo uses:
+    ``numpy.percentile`` over raw samples, 0.0 when empty.  ``Histogram``,
+    ``HistogramSnapshot``, and ``serve_rec``'s result records all route
+    through here, so a histogram snapshot and a serving record computed from
+    the same samples can never disagree."""
+    samples = np.asarray(samples, dtype=np.float64)
+    if samples.size == 0:
+        return 0.0
+    return float(np.percentile(samples, q))
+
+
+def latency_percentiles(samples, qs=(50, 95, 99)) -> dict:
+    """The serving-record percentile keys (``lat_p50_s``...) from raw
+    per-batch latency samples — the shared form of ``serve_rec`` results and
+    benchmark rows."""
+    return {f"lat_p{q:g}_s": exact_percentile(samples, q) for q in qs}
+
+
 def bucketize(samples: np.ndarray, bounds: np.ndarray) -> np.ndarray:
     """Per-bucket counts; under/overflowing samples clip to the edge buckets."""
     samples = np.asarray(samples, dtype=np.float64)
@@ -82,7 +101,7 @@ class HistogramSnapshot:
     def percentile(self, q: float) -> float:
         """Exact when samples are retained; bucket-interpolated otherwise."""
         if self.samples.size:
-            return float(np.percentile(self.samples, q))
+            return exact_percentile(self.samples, q)
         return self.bucket_percentile(q)
 
     def bucket_percentile(self, q: float) -> float:
@@ -187,9 +206,7 @@ class Histogram:
         return len(self._samples)
 
     def percentile(self, q: float) -> float:
-        if not self._samples:
-            return 0.0
-        return float(np.percentile(np.asarray(self._samples), q))
+        return exact_percentile(self._samples, q)
 
     def snapshot(self) -> HistogramSnapshot:
         samples = np.asarray(self._samples, dtype=np.float64)

@@ -1,8 +1,11 @@
-"""Committed benchmark baselines + the tolerance gate (benchmarks/baseline)."""
+"""Committed benchmark baselines + the tolerance gate (benchmarks/baseline):
+point-ratio fallback, the noise-aware bootstrap-CI gate for sampled rows, and
+the 3x hard backstop."""
 
 import json
 import os
 
+import numpy as np
 import pytest
 
 from benchmarks import baseline as B
@@ -58,6 +61,72 @@ def test_compare_skips_modeled_rows():
     # us_per_call == 0 rows (modeled/ratio) are presence-checked only
     res = B.compare([_row("a", 0.0)], [_row("a", 0.0)], rel_tol=0.1)
     assert res["checked"] == 0 and not res["missing"]
+
+
+def _sampled(name, us, center, n=20, jitter=1e-4, seed=0):
+    rng = np.random.default_rng(seed)
+    return _row(name, us,
+                samples_s=list(center + jitter * rng.standard_normal(n)))
+
+
+def test_bootstrap_gate_ignores_point_noise():
+    """Same latency distribution, jittery point ratio inside the backstop:
+    the sampled gate passes where the point gate would fail."""
+    base = _sampled("a", 100.0, 0.010, seed=1)
+    meas = _sampled("a", 250.0, 0.010, seed=2)      # 2.5x point blip
+    res = B.compare([meas], [base], rel_tol=3.0, boot_tol=0.5)
+    assert not res["regressions"]
+    d = res["detail"]["a"]
+    assert d["method"] == "bootstrap"
+    lo, hi = d["ci"]
+    assert lo <= 1.0 <= hi or (lo < 1.5 and hi < 1.5)
+    # the same point blip WITHOUT samples fails a tight point gate
+    res2 = B.compare([_row("a", 250.0)], [_row("a", 100.0)], rel_tol=0.5)
+    assert res2["regressions"] and res2["detail"]["a"]["method"] == "point"
+
+
+def test_bootstrap_gate_catches_consistent_shift_under_backstop():
+    """A consistent 2x median shift is well inside the 3x point tolerance but
+    statistically unambiguous — the bootstrap gate fails it."""
+    base = _sampled("a", 100.0, 0.010, seed=1)
+    meas = _sampled("a", 200.0, 0.020, seed=2)
+    res = B.compare([meas], [base], rel_tol=3.0, boot_tol=0.5)
+    assert [r[0] for r in res["regressions"]] == ["a"]
+    lo, hi = res["detail"]["a"]["ci"]
+    assert lo > 1.5 and hi == pytest.approx(2.0, rel=0.2)
+    # deterministic: the same inputs give the same CI verdict
+    lo2, hi2 = B.bootstrap_ratio_ci(base["samples_s"], meas["samples_s"])
+    assert (lo2, hi2) == (lo, hi)
+
+
+def test_hard_backstop_applies_even_with_samples():
+    """A 5x shift fails regardless of gate flavor (the 3x point backstop)."""
+    base = _sampled("a", 100.0, 0.010, seed=1)
+    meas = _sampled("a", 500.0, 0.050, seed=2)
+    res = B.compare([meas], [base], rel_tol=3.0, boot_tol=100.0)
+    assert [r[0] for r in res["regressions"]] == ["a"]
+
+
+def test_too_few_samples_falls_back_to_point_gate():
+    base = _row("a", 100.0, samples_s=[0.01, 0.01])     # < MIN_SAMPLES
+    meas = _sampled("a", 150.0, 0.015, seed=3)
+    res = B.compare([meas], [base], rel_tol=3.0)
+    assert res["detail"]["a"]["method"] == "point"
+    assert not res["regressions"]
+
+
+def test_cross_host_never_gates_sampled_rows():
+    base = _sampled("a", 100.0, 0.010, seed=1)
+    meas = _sampled("a", 200.0, 0.020, seed=2)
+    res = B.compare([meas], [base], rel_tol=3.0, gate_timing=False)
+    assert not res["regressions"]
+
+
+def test_bootstrap_improvement_reported():
+    base = _sampled("a", 200.0, 0.020, seed=1)
+    meas = _sampled("a", 100.0, 0.010, seed=2)
+    res = B.compare([meas], [base], rel_tol=3.0, boot_tol=0.5)
+    assert [r[0] for r in res["improvements"]] == ["a"]
 
 
 def test_refresh_script_covers_committed_suites():

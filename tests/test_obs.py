@@ -21,10 +21,12 @@ def _obs_off():
     obs.disable()
     obs.registry().reset()
     obs.tracer().reset()
+    obs.install_observatory()              # clear any installed observatory
     yield
     obs.disable()
     obs.registry().reset()
     obs.tracer().reset()
+    obs.install_observatory()
 
 
 # ---------------------------------------------------------------------------
@@ -203,9 +205,22 @@ def test_disabled_mode_records_nothing():
         pass
     obs.instant("i")
     obs.trace_counter("c", v=1.0)
+    assert obs.observe_batch(batch=0, mode="overlap", latency_s=0.01) is None
     snap = obs.snapshot()
     assert snap.counters == {} and snap.histograms == {} and snap.info == {}
     assert obs.tracer().events == []
+
+
+def test_disabled_observe_batch_bypasses_installed_observatory():
+    """Even with an observatory installed, the disabled facade is one bool
+    check — the SLO engine and flight recorder see nothing."""
+    eng = obs.SLOEngine(obs.SLOSpec(p99_latency_s=1e-9, fast_window=1,
+                                    slow_window=1))
+    rec = obs.FlightRecorder(capacity=4, min_history=1)
+    obs.install_observatory(slo=eng, recorder=rec)
+    assert not obs.enabled()
+    assert obs.observe_batch(batch=0, mode="overlap", latency_s=99.0) is None
+    assert eng.n == 0 and len(rec) == 0 and rec.dumps == []
 
 
 def test_disabled_span_is_shared_singleton():
