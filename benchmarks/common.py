@@ -8,7 +8,7 @@ import time
 
 import jax
 
-ROWS: list[tuple[str, float, str, list | None]] = []
+ROWS: list[tuple[str, float, str, list | None, dict | None]] = []
 
 
 @functools.lru_cache(maxsize=1)
@@ -22,12 +22,16 @@ def run_metadata() -> dict:
 
 
 def emit(name: str, us_per_call: float, derived: str = "",
-         samples: list | None = None) -> None:
+         samples: list | None = None, extra: dict | None = None) -> None:
     """Record one benchmark row.  ``samples`` (per-batch latency seconds)
     rides along into the JSON artifact as ``samples_s`` so the baseline gate
-    can bootstrap a confidence interval instead of comparing two points."""
+    can bootstrap a confidence interval instead of comparing two points.
+    ``extra`` is merged verbatim into the JSON record — suites use it to
+    stamp the seeds/specs that reproduce the row (e.g. ``serve_storm``'s
+    arrival + fault schedules)."""
     ROWS.append((name, us_per_call, derived,
-                 [float(s) for s in samples] if samples else None))
+                 [float(s) for s in samples] if samples else None,
+                 dict(extra) if extra else None))
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
@@ -39,8 +43,9 @@ def write_json(path: str) -> None:
     meta = run_metadata()
     records = [
         {"name": n, "us_per_call": u, "derived": d, **meta,
-         **({"samples_s": s} if s else {})}
-        for n, u, d, s in ROWS
+         **({"samples_s": s} if s else {}),
+         **(x or {})}
+        for n, u, d, s, x in ROWS
     ]
     with open(path, "w") as f:
         json.dump(records, f, indent=1)

@@ -13,7 +13,7 @@ import time
 from benchmarks import common
 from benchmarks import (
     autotune, cache_sim, collision_sweep, design_opt, locality, roofline,
-    serve_qps, traffic, tt_sweep,
+    serve_qps, serve_storm, traffic, tt_sweep,
 )
 
 SUITES = {
@@ -24,6 +24,7 @@ SUITES = {
     "tt_sweep": tt_sweep.run,          # paper: TT rank/factorization trade-off
     "cache_sim": cache_sim.run,        # paper: SRAM cache + duplication sweep
     "serve_qps": serve_qps.run,        # measured QPS: packed megakernel pipeline
+    "serve_storm": serve_storm.run,    # resilient front end: flash crowds + chaos
     "roofline": roofline.run,          # deliverable (g)
     "autotune": autotune.run,          # cost-model fidelity + tuned-vs-heuristic
 }
@@ -36,6 +37,9 @@ def main() -> int:
                     help="also write all emitted rows as JSON (perf trajectory)")
     ap.add_argument("--tiny", action="store_true",
                     help="shrunk configs for suites that support them (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for suites that take one (stamped into their "
+                         "JSON rows so any row reproduces its run)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
@@ -46,10 +50,13 @@ def main() -> int:
             import inspect
 
             fn = SUITES[n]
-            if args.tiny and "tiny" in inspect.signature(fn).parameters:
-                fn(tiny=True)
-            else:
-                fn()
+            sig = inspect.signature(fn).parameters
+            kw = {}
+            if args.tiny and "tiny" in sig:
+                kw["tiny"] = True
+            if "seed" in sig:
+                kw["seed"] = args.seed
+            fn(**kw)
             wall = time.time() - t0
             # wall-clock rides the emitted rows so --json tracks a MEASURED
             # perf trajectory across PRs, not just modeled traffic

@@ -1,0 +1,122 @@
+"""serve_storm — the resilient front end under calm, flash-crowd, and chaos.
+
+Three scenarios over the same offline plan (one ``build_serve_state`` per
+config, reused across scenarios so only the traffic and faults differ):
+
+* ``calm``  — base-rate Poisson traffic, no faults: the front end's floor
+  (expect ~zero shed, ~zero misses, ladder never moves);
+* ``flash`` — a flash-crowd episode multiplies the arrival rate mid-run:
+  admission control must shed, the ladder may step, everything recovers;
+* ``chaos`` — flash crowd **plus** a dispatch stall, a prefetch drop, a
+  replica loss, and transient gather errors: the full degradation ladder
+  with bounded-retry dispatch.
+
+Rows (one per scenario): ``us_per_call`` is the virtual p99 request latency;
+``derived`` summarizes deadline-miss rate, shed rate, ladder transitions,
+and time-to-recover; ``samples_s`` carries the per-batch virtual latencies;
+and the ``extra`` payload stamps the **full arrival + fault specs (seeds
+included)** so any JSON row reproduces its run exactly.
+
+Virtual-clock semantics (see ``repro.serve.frontend``): latencies are
+virtual seconds, so rows are comparable across hosts; the suite runs
+``service_mode="measured"`` by default so real kernel time still moves the
+needle, and ``tiny=True`` (CI) switches to ``"fixed"`` for determinism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro import obs, serve
+from repro.configs import registry
+from repro.launch.serve_rec import build_serve_state
+from repro.models import dlrm
+
+
+def _scenarios(horizon_s: float, seed: int) -> list[tuple[str, str, str]]:
+    """(name, arrival spec, fault spec) per scenario — all times virtual."""
+    h = horizon_s
+    flash = f"flash={0.3 * h:.2f}+{0.25 * h:.2f}x6"
+    return [
+        ("calm",
+         f"rate=300,horizon={h},deadline_ms=250,seed={seed}",
+         ""),
+        ("flash",
+         f"rate=300,horizon={h},deadline_ms=250,{flash},drift_s={0.4 * h:.2f},"
+         f"seed={seed}",
+         ""),
+        ("chaos",
+         f"rate=300,horizon={h},deadline_ms=250,{flash},seed={seed}",
+         f"stall@{0.35 * h:.2f}:0.5,drop@{0.4 * h:.2f},"
+         f"replica@{0.5 * h:.2f}:{0.2 * h:.2f},gather@{0.7 * h:.2f}:1,"
+         f"retries=3"),
+    ]
+
+
+def run(tiny: bool = False, seed: int = 0) -> None:
+    cfg = registry.get_dlrm("dlrm-qr-smoke")
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(seed), cfg)
+    state = build_serve_state(cfg, shards=4, alpha=1.05, seed=seed)
+    horizon = 1.5 if tiny else 3.0
+    fcfg = serve.FrontendConfig(
+        batch_size=8, queue_cap=48,
+        service_mode="fixed" if tiny else "measured",
+    )
+
+    for name, arrival, faults in _scenarios(horizon, seed):
+        aspec = serve.ArrivalSpec.parse(arrival)
+        fspec = serve.FaultSpec.parse(faults) if faults else serve.FaultSpec()
+        slo = obs.SLOEngine(obs.SLOSpec.parse(
+            "p99_ms=60,objective=0.99,fast_window=4,slow_window=8,"
+            f"name=storm_{name}"
+        ))
+        frontend = serve.Frontend(
+            cfg, fcfg, state, params,
+            slo=slo, faults=serve.FaultInjector(fspec),
+        )
+        report = frontend.run(serve.generate(aspec, cfg))
+
+        req = report["requests"]
+        deg = report["degrade"]
+        ttr = report["time_to_recover_s"]
+        common.emit(
+            f"serve_storm/{name}/p99_virtual",
+            report["req_lat_p99_s"] * 1e6,
+            f"served={req['served']}/{req['generated']} "
+            f"miss={report['deadline_miss_rate']:.3f} "
+            f"shed={report['shed_rate']:.3f} "
+            f"steps={len(deg['transitions'])} "
+            f"ttr={'%.2fs' % ttr if ttr is not None else 'n/a'} "
+            f"unaccounted={req['unaccounted']}",
+            samples=None,
+            extra={
+                "scenario": name,
+                "seed": seed,
+                "arrival": aspec.describe(),
+                "faults": fspec.describe(),
+                "requests": req,
+                "deadline_miss_rate": report["deadline_miss_rate"],
+                "shed_rate": report["shed_rate"],
+                "time_to_recover_s": ttr,
+                "transitions": deg["transitions"],
+                "service_mode": fcfg.service_mode,
+            },
+        )
+        common.emit(
+            f"serve_storm/{name}/p50_virtual",
+            report["req_lat_p50_s"] * 1e6,
+            f"virtual_qps={report['virtual_qps']:.0f} "
+            f"hit_rate={report['hit_rate']:.3f}",
+            extra={"scenario": name, "seed": seed},
+        )
+        if req["unaccounted"] != 0:
+            raise AssertionError(
+                f"serve_storm/{name}: {req['unaccounted']} unaccounted "
+                f"requests — the front end's conservation law is broken"
+            )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(tiny=True)

@@ -147,13 +147,33 @@ def split_slot_budget(
 
     Every table is guaranteed ``min_slots`` (a scheduler needs at least one
     slot) — this per-table floor takes precedence over the total, so a
-    starved budget (``total_slots < min_slots * len(values)``) over-allocates
-    to honor it.  No table is given more slots than it has rows (a rowless
-    table gets zero).  Otherwise budgets sum to <= ``total_slots``.
+    starved budget (``min_slots * len(values) <= total_slots < ...``)
+    over-allocates to honor it.  No table is given more slots than it has
+    rows (a rowless table gets zero).  Otherwise budgets sum to
+    <= ``total_slots``.
+
+    Degenerate inputs are **errors**, not silent empty plans: an empty table
+    list, a zero/negative ``total_slots``, or a non-positive ``min_slots``
+    all raise ``ValueError`` — a caller that reached the waterfill with no
+    budget has a configuration bug upstream (e.g. ``cache_vmem_mb`` too
+    small for one row), and an empty ``[]`` plan would only surface later as
+    a confusing scheduler failure.
     """
     num_t = len(values)
     if num_t == 0:
-        return []
+        raise ValueError(
+            "split_slot_budget needs at least one table's prefetch values; "
+            "an empty table list cannot be budgeted (disable the cache "
+            "instead of waterfilling nothing)"
+        )
+    if total_slots <= 0:
+        raise ValueError(
+            f"split_slot_budget needs a positive slot budget, got "
+            f"total_slots={total_slots}; 0-slot configurations must skip the "
+            f"waterfill (spec.cache_slots=0 disables the cache)"
+        )
+    if min_slots <= 0:
+        raise ValueError(f"min_slots must be positive, got {min_slots}")
     caps = [int(v.size) for v in values]
     alloc = [min(min_slots, cap) for cap in caps]
     remaining = total_slots - sum(alloc)

@@ -352,6 +352,75 @@ def run_pipeline(cfg, *, batch: int = 16, batches: int = 6, alpha: float = 1.05,
 _RECORD_DROP = ("logits", "latencies_s", "traffic_report")
 
 
+# -- resilient front-end mode (--frontend) ------------------------------------
+
+_DEFAULT_ARRIVAL = "rate=400,horizon=3,deadline_ms=250"
+_DEFAULT_FRONTEND_SLO = ("p99_ms=60,objective=0.99,fast_window=4,"
+                         "slow_window=8,name=frontend")
+
+
+def run_frontend(cfg, state, params, args, slo_engine=None) -> dict:
+    """The ``--frontend`` serving session: open-loop traffic through the
+    admission queue, fault injector, and degradation ladder.
+
+    Returns the front end's report with the arrival/fault specs (seeds
+    included) stamped in, so a saved record reproduces the run exactly.
+    """
+    from repro import serve
+
+    aspec = serve.ArrivalSpec.parse(args.arrival or _DEFAULT_ARRIVAL)
+    if args.seed and aspec.seed == 0:      # --seed flows into the traffic
+        aspec = dataclasses.replace(aspec, seed=args.seed)
+    fspec = serve.FaultSpec.parse(args.faults) if args.faults else serve.FaultSpec()
+    if slo_engine is None:
+        slo_engine = obs.SLOEngine(obs.SLOSpec.parse(_DEFAULT_FRONTEND_SLO))
+    fcfg = serve.FrontendConfig(
+        batch_size=args.batch or (8 if args.tiny else 16),
+        queue_cap=args.queue_cap,
+        shed_policy=args.shed_policy,
+        service_mode=args.service_mode,
+    )
+    frontend = serve.Frontend(
+        cfg, fcfg, state, params,
+        slo=slo_engine, faults=serve.FaultInjector(fspec),
+    )
+    requests = serve.generate(aspec, cfg)
+    report = frontend.run(requests)
+    report["arrival"] = aspec.describe()
+    report["faults"] = fspec.describe()
+    report["config"] = cfg.name
+    report["mode"] = "frontend"
+
+    req = report["requests"]
+    print(
+        f"[frontend] {req['generated']} requests over {aspec.horizon_s:.1f}s "
+        f"(virtual): served {req['served']}, deadline-missed "
+        f"{req['deadline_missed']}, shed {req['shed_total']} "
+        f"(reject {req['shed_reject']} / evict {req['shed_evict']} / "
+        f"shed-mode {req['shed_mode']} / abandoned {req['abandoned']}), "
+        f"unaccounted {req['unaccounted']}"
+    )
+    print(
+        f"[frontend] request latency p50={report['req_lat_p50_s'] * 1e3:.1f}ms "
+        f"p95={report['req_lat_p95_s'] * 1e3:.1f}ms "
+        f"p99={report['req_lat_p99_s'] * 1e3:.1f}ms (virtual), "
+        f"miss rate {report['deadline_miss_rate']:.3f}, "
+        f"shed rate {report['shed_rate']:.3f}, "
+        f"hit rate {report['hit_rate']:.3f}"
+    )
+    deg = report["degrade"]
+    for tr in deg["transitions"]:
+        print(f"[degrade] batch {tr['at_batch']} t={tr['t_s']:.2f}s "
+              f"{tr['from']} -> {tr['to']} ({tr['reason']})")
+    ttr = report["time_to_recover_s"]
+    print(
+        f"[degrade] final rung {deg['rung']}, "
+        f"{len(deg['transitions'])} transitions, time-to-recover "
+        f"{'%.2fs' % ttr if ttr is not None else 'n/a'}"
+    )
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
@@ -388,6 +457,26 @@ def main(argv=None) -> int:
     ap.add_argument("--flight-dir", default=None, metavar="DIR",
                     help="directory for flight-recorder JSON dumps (written "
                          "when an SLO burns or a latency sample is anomalous)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve open-loop traffic through the resilient "
+                         "front end (admission queue + deadline batching + "
+                         "fault injection + degradation ladder)")
+    ap.add_argument("--arrival", default=None, metavar="SPEC",
+                    help="traffic model, e.g. 'rate=400,horizon=3,"
+                         "deadline_ms=250,flash=1.0+0.5x8,drift_s=1,seed=0'")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="fault schedule, e.g. 'stall@1.0:0.5,drop@1.5,"
+                         "replica@2.0:1.0,gather@3.0:2,retries=3'")
+    ap.add_argument("--shed-policy", default="reject_new",
+                    choices=["reject_new", "drop_oldest"],
+                    help="load-shedding policy at a full admission queue")
+    ap.add_argument("--queue-cap", type=int, default=64,
+                    help="admission queue bound (requests)")
+    ap.add_argument("--service-mode", default="measured",
+                    choices=["measured", "fixed"],
+                    help="virtual service time: calibrated from measured "
+                         "wall ('measured') or exactly one unit per batch "
+                         "('fixed' — the deterministic CI configuration)")
     args = ap.parse_args(argv)
 
     telemetry = bool(args.metrics_json or args.trace_out or args.slo
@@ -404,8 +493,12 @@ def main(argv=None) -> int:
     if args.slo or args.flight_dir or args.report:
         recorder = obs.FlightRecorder(out_dir=args.flight_dir)
     if slo_engine is not None or recorder is not None:
-        # after enable(): the telemetry join cursors into the live registry
-        obs.install_observatory(slo=slo_engine, recorder=recorder)
+        # after enable(): the telemetry join cursors into the live registry.
+        # In --frontend mode the front end feeds the SLO engine itself, so
+        # the observatory carries only the recorder (no double observation).
+        obs.install_observatory(
+            slo=None if args.frontend else slo_engine, recorder=recorder,
+        )
 
     name = f"{args.arch}-smoke" if (args.smoke or args.tiny) else args.arch
     cfg = registry.get_dlrm(name)
@@ -433,6 +526,29 @@ def main(argv=None) -> int:
         f"{plan.tables[0].local_share:.2f}, "
         f"intra-GnR reuse[{big_name}]={state.locs[0][big_name].mean_intra_reuse:.2f}"
     )
+
+    if args.frontend:
+        report = run_frontend(cfg, state, params, args, slo_engine=slo_engine)
+        if recorder is not None and recorder.dumps:
+            for d in recorder.dumps:
+                print(f"[flight] dumped {d['records']} records "
+                      f"({d['reason']}) -> {d.get('path', '<memory>')}")
+            report["flight_dumps"] = [
+                {k: v for k, v in d.items() if k != "context"}
+                for d in recorder.dumps
+            ]
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump([report], f, indent=1)
+            print(f"# wrote frontend record to {args.json}")
+        if args.metrics_json:
+            snap = obs.snapshot().to_json()
+            snap["config"] = cfg.name
+            snap["frontend"] = report
+            with open(args.metrics_json, "w") as f:
+                json.dump(snap, f, indent=1)
+            print(f"# wrote metric registry to {args.metrics_json}")
+        return 0
 
     modes = ["sequential", "overlap"] if args.mode == "both" else [args.mode]
     records = []

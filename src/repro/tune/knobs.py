@@ -155,6 +155,16 @@ def slot_budgets(spec, knobs: Knobs, values: "list[np.ndarray] | None"
     row_bytes = width * np.dtype(emb.param_dtype).itemsize
     vmem_slots = (spec.cache_vmem_mb * 2**20) // max(1, row_bytes)
     total = min(knobs.cache_slots * num_t, vmem_slots)
+    if total <= 0:
+        # cache_slots > 0 but the VMEM clamp leaves no room for one row:
+        # surface the contradiction instead of silently over-allocating the
+        # per-table floor (the waterfill refuses zero budgets by contract)
+        raise ValueError(
+            f"cache_vmem_mb={spec.cache_vmem_mb} fits no cache row "
+            f"(row_bytes={row_bytes}) but knobs.cache_slots="
+            f"{knobs.cache_slots} asks for a cache; raise cache_vmem_mb or "
+            f"set cache_slots=0"
+        )
     if knobs.cache_slot_policy == "adaptive" and values is not None:
         budgets = intra_gnr.split_slot_budget(values, total)
     else:

@@ -1,0 +1,124 @@
+"""Direct unit tests for the elastic fault-detection primitives.
+
+The serving fault harness (``repro.serve.faults``) drives ``Heartbeat`` on a
+virtual clock to simulate replica loss deterministically, so the edge cases
+here — empty-beat hosts, injected clocks, ``min_step`` semantics — are
+load-bearing for the chaos benchmarks, not just hygiene.
+"""
+
+import pytest
+
+from repro.distributed.elastic import Heartbeat
+
+
+def test_heartbeat_empty_state():
+    hb = Heartbeat(deadline_s=5.0)
+    assert hb.failed_hosts(now=1e9) == []
+    assert hb.min_step() == 0
+    assert hb.alive_hosts() == []
+
+
+def test_registered_but_never_beat_host_fails_and_pins_min_step():
+    hb = Heartbeat(deadline_s=5.0)
+    hb.register(0, now=0.0)
+    hb.beat(1, step=7, now=0.0)
+    # before the deadline: both alive, but the empty-beat host has proven no
+    # progress, so the fleet watermark is 0, not 7
+    assert hb.failed_hosts(now=4.0) == []
+    assert hb.min_step() == 0
+    # past the deadline the silent host is detected without ever beating
+    hb.beat(1, step=8, now=4.0)           # keep host 1 fresh
+    assert hb.failed_hosts(now=6.0) == [0]
+    assert hb.alive_hosts(now=6.0) == [1]
+    # its first beat clears both the failure and the watermark pin
+    hb.beat(0, step=9, now=6.5)
+    assert hb.failed_hosts(now=7.0) == []
+    assert hb.min_step() == 8
+
+
+def test_register_is_idempotent_and_never_demotes_a_beat():
+    hb = Heartbeat(deadline_s=5.0)
+    hb.beat(0, step=3, now=10.0)
+    hb.register(0, now=99.0)              # no-op: host already beating
+    assert hb.marks[0] == (3, 10.0)
+    hb.register(1, now=10.0)
+    hb.register(1, now=20.0)              # idempotent: keeps the first clock
+    assert hb.marks[1] == (None, 10.0)
+
+
+def test_injected_clock_drives_default_now():
+    t = {"now": 0.0}
+    hb = Heartbeat(deadline_s=2.0, clock=lambda: t["now"])
+    hb.beat(0, step=1)                    # stamped at virtual 0.0
+    t["now"] = 1.0
+    assert hb.failed_hosts() == []
+    t["now"] = 3.5
+    assert hb.failed_hosts() == [0]
+    # per-call now= still overrides the injected clock
+    assert hb.failed_hosts(now=1.5) == []
+    hb.beat(0, step=2)                    # re-stamped at virtual 3.5
+    assert hb.failed_hosts() == []
+    assert hb.min_step() == 2
+
+
+def test_min_step_over_mixed_hosts():
+    hb = Heartbeat(deadline_s=5.0)
+    hb.beat(0, step=10, now=0.0)
+    hb.beat(1, step=4, now=0.0)
+    hb.beat(2, step=7, now=0.0)
+    assert hb.min_step() == 4
+    # a failed host still holds the watermark (its progress is the truth)
+    assert hb.failed_hosts(now=10.0) == [0, 1, 2]
+    assert hb.min_step() == 4
+
+
+def test_heartbeat_steps_coerced_to_int():
+    hb = Heartbeat(deadline_s=5.0)
+    hb.beat(0, step=3.0, now=0.0)         # float steps normalize
+    assert hb.marks[0][0] == 3 and isinstance(hb.marks[0][0], int)
+
+
+def test_failed_hosts_boundary_is_strict():
+    hb = Heartbeat(deadline_s=5.0)
+    hb.beat(0, step=1, now=0.0)
+    assert hb.failed_hosts(now=5.0) == []   # exactly at deadline: alive
+    assert hb.failed_hosts(now=5.0 + 1e-9) == [0]
+
+
+def test_degraded_mesh_shapes_and_pod_async_unchanged():
+    # the legacy behaviors the serve harness composes with
+    from repro.distributed.elastic import PodAsyncState, degraded_mesh_shapes
+
+    st = PodAsyncState(stale_limit=2, last_sync=0)
+    assert st.should_sync(0, pod_slow=True) is False
+    assert st.should_sync(2, pod_slow=True) is True
+    shapes = degraded_mesh_shapes(16, 4)
+    assert shapes[0] == (4, 4) and shapes[-1][0] >= 1
+
+
+@pytest.mark.parametrize("policy", ["register_first", "beat_first"])
+def test_alive_then_lost_then_recovered_cycle(policy):
+    """The replica-loss cycle the fault injector simulates."""
+    t = {"now": 0.0}
+    hb = Heartbeat(deadline_s=3.0, clock=lambda: t["now"])
+    for h in range(4):
+        if policy == "register_first":
+            hb.register(h)
+        hb.beat(h, step=0)
+    # steady state: everyone beats each tick
+    for tick in range(1, 4):
+        t["now"] = float(tick)
+        for h in range(4):
+            hb.beat(h, step=tick)
+    assert hb.failed_hosts() == []
+    # host 2 goes silent for > deadline
+    for tick in range(4, 9):
+        t["now"] = float(tick)
+        for h in (0, 1, 3):
+            hb.beat(h, step=tick)
+    assert hb.failed_hosts() == [2]
+    assert hb.alive_hosts() == [0, 1, 3]
+    assert hb.min_step() == 3             # the lost host's watermark holds
+    # recovery: one beat brings it back
+    hb.beat(2, step=8)
+    assert hb.failed_hosts() == []

@@ -240,7 +240,15 @@ def test_split_slot_budget_min_and_caps():
     assert budgets[0] >= 1 and budgets[1] >= 1
     assert budgets[0] <= 4                 # never more slots than rows
     assert sum(budgets) <= 100
-    assert intra_gnr.split_slot_budget([], 10) == []
+    # degenerate inputs are explicit errors, not silent empty plans
+    with pytest.raises(ValueError, match="empty table list"):
+        intra_gnr.split_slot_budget([], 10)
+    with pytest.raises(ValueError, match="positive slot budget"):
+        intra_gnr.split_slot_budget([np.ones(4)], 0)
+    with pytest.raises(ValueError, match="positive slot budget"):
+        intra_gnr.split_slot_budget([np.ones(4)], -3)
+    with pytest.raises(ValueError, match="min_slots"):
+        intra_gnr.split_slot_budget([np.ones(4)], 10, min_slots=0)
     # starved budget still gives every table one slot
     tight = intra_gnr.split_slot_budget([np.ones(8)] * 3, 2)
     assert all(b >= 1 for b in tight)

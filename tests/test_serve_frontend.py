@@ -1,0 +1,448 @@
+"""The resilient serving front end: arrival, faults, ladder, accounting.
+
+The load-bearing claims:
+
+* the traffic generator is a pure function of its spec (seeded);
+* every generated request lands in exactly one accounting bucket
+  (``unaccounted == 0`` — the conservation law the chaos CI gate relies on);
+* the degradation ladder's kernel rungs (full / nocache / pertable) are
+  **bitwise identical** — a mid-stream rung change is invisible to the
+  model — and the baseline rung matches the engine's own jnp reference
+  bitwise (single-chip and on an 8-device mesh);
+* fault injection is deterministic and the retry/backoff/abandon path
+  keeps the accounting identity intact.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs, serve
+from repro.configs import registry
+from repro.core import embedding_bag
+from repro.launch.serve_rec import build_serve_state
+from repro.models import dlrm
+from repro.serve.degrade import RUNGS
+from repro.serve.frontend import recovery_times
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One offline pass shared by the whole module (plan+compile is slow)."""
+    cfg = registry.get_dlrm("dlrm-qr-smoke")
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+    state = build_serve_state(cfg, shards=4, alpha=1.05, seed=0)
+    return cfg, params, state
+
+
+def _frontend(served, *, faults=None, slo_text=None, **fkw):
+    cfg, params, state = served
+    fkw.setdefault("batch_size", 8)
+    fkw.setdefault("queue_cap", 32)
+    fkw.setdefault("service_mode", "fixed")
+    slo = obs.SLOEngine(obs.SLOSpec.parse(
+        slo_text or "p99_ms=60,objective=0.99,fast_window=4,slow_window=8"
+    ))
+    return serve.Frontend(
+        cfg, serve.FrontendConfig(**fkw), state, params,
+        slo=slo, faults=serve.FaultInjector(faults or serve.FaultSpec()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# arrival
+# ---------------------------------------------------------------------------
+
+def test_arrival_deterministic_and_sorted(served):
+    cfg, _, _ = served
+    spec = serve.ArrivalSpec(rate_rps=500, horizon_s=1.0, seed=7,
+                             drift_period_s=0.3)
+    a = serve.generate(spec, cfg)
+    b = serve.generate(spec, cfg)
+    assert len(a) == len(b) > 100
+    for ra, rb in zip(a, b):
+        assert ra.t_arrive_s == rb.t_arrive_s
+        assert np.array_equal(ra.idx, rb.idx)
+        assert np.array_equal(ra.dense, rb.dense)
+    ts = [r.t_arrive_s for r in a]
+    assert ts == sorted(ts) and all(0 <= t < 1.0 for t in ts)
+    assert all(r.idx.shape == (cfg.num_tables, cfg.pooling) for r in a[:5])
+    # a different seed moves the stream
+    c = serve.generate(dataclasses.replace(spec, seed=8), cfg)
+    assert len(c) != len(a) or ts != [r.t_arrive_s for r in c]
+
+
+def test_flash_episode_raises_arrivals(served):
+    cfg, _, _ = served
+    base = serve.ArrivalSpec(rate_rps=300, horizon_s=2.0, seed=3)
+    flash = dataclasses.replace(
+        base, flash=(serve.FlashEpisode(0.5, 1.0, 8.0),)
+    )
+    n_base = len(serve.generate(base, cfg))
+    n_flash = len(serve.generate(flash, cfg))
+    # expected ~300*2 vs 300*1 + 2400*1: the flash stream is far denser
+    assert n_flash > 2 * n_base
+    in_ep = [r for r in serve.generate(flash, cfg) if 0.5 <= r.t_arrive_s < 1.5]
+    assert len(in_ep) > 0.6 * n_flash
+
+
+def test_arrival_parse_roundtrip():
+    spec = serve.ArrivalSpec.parse(
+        "rate=250,horizon=2,deadline_ms=100,alpha=1.1,"
+        "flash=0.5+0.4x6,flash=1.2+0.2x3,drift_s=0.5,drift_frac=0.3,seed=9"
+    )
+    assert spec.rate_rps == 250 and spec.deadline_s == pytest.approx(0.1)
+    assert len(spec.flash) == 2 and spec.flash[1].multiplier == 3.0
+    assert spec.rate_at(0.6) == pytest.approx(250 * 6)
+    assert spec.rate_at(1.9) == pytest.approx(250)
+    with pytest.raises(ValueError, match="unknown --arrival key"):
+        serve.ArrivalSpec.parse("bogus=1")
+    with pytest.raises(ValueError, match="flash episode"):
+        serve.ArrivalSpec.parse("flash=1.0")
+
+
+def test_zipf_drift_moves_the_hot_set(served):
+    cfg, _, _ = served
+    spec = serve.ArrivalSpec(rate_rps=2000, horizon_s=1.0, seed=1,
+                             drift_period_s=0.5, drift_fraction=0.25)
+    reqs = serve.generate(spec, cfg)
+    early = np.concatenate([r.idx.ravel() for r in reqs if r.t_arrive_s < 0.5])
+    late = np.concatenate([r.idx.ravel() for r in reqs if r.t_arrive_s >= 0.5])
+    off = serve.arrival.drift_offset(spec, 0.7, cfg.vocab_per_table)
+    assert off > 0
+    # the late hot set is the early hot set rotated by the drift offset
+    top_early = np.bincount(early, minlength=cfg.vocab_per_table).argmax()
+    top_late = np.bincount(late, minlength=cfg.vocab_per_table).argmax()
+    assert top_late == (top_early + off) % cfg.vocab_per_table
+
+
+# ---------------------------------------------------------------------------
+# faults
+# ---------------------------------------------------------------------------
+
+def test_fault_parse_and_latching():
+    spec = serve.FaultSpec.parse(
+        "stall@1.0:0.5,drop@1.5,replica@2.0:1.0,gather@3.0:2,"
+        "retries=2,backoff_ms=10,hosts=3"
+    )
+    assert spec.max_retries == 2 and spec.hosts == 3
+    assert spec.backoff_s(0) == pytest.approx(0.01)
+    assert spec.backoff_s(2) == pytest.approx(0.04)
+    inj = serve.FaultInjector(spec)
+    assert inj.advance(0.5) == []
+    due = inj.advance(1.6)
+    assert [e.kind for e in due] == ["stall", "drop"]
+    assert inj.consume_stall_s() == pytest.approx(0.5)
+    assert inj.consume_stall_s() == 0.0          # consumed exactly once
+    assert inj.consume_prefetch_drop() is True
+    assert inj.consume_prefetch_drop() is False
+    inj.advance(3.1)
+    with pytest.raises(serve.TransientGatherError):
+        inj.check_gather()
+    with pytest.raises(serve.TransientGatherError):
+        inj.check_gather()
+    inj.check_gather()                           # 2 armed, both consumed
+    assert inj.exhausted()
+
+
+def test_replica_loss_detected_and_recovers():
+    spec = serve.FaultSpec(
+        events=(serve.FaultEvent(t_s=1.0, kind="replica",
+                                 duration_s=0.5, host=2),),
+        hosts=4, hb_deadline_s=0.05,
+    )
+    inj = serve.FaultInjector(spec)
+    for t in np.arange(0.0, 0.99, 0.02):
+        inj.advance(float(t))
+        assert not inj.replica_lost()
+    inj.advance(1.0)                 # outage latches; host 2 goes silent
+    assert not inj.replica_lost()    # watermark not yet past the deadline
+    inj.advance(1.1)
+    assert inj.replica_lost() and inj.lost_hosts() == [2]
+    inj.advance(1.6)                 # outage over: the host beats again
+    assert not inj.replica_lost()
+
+
+def test_gather_retry_exhaustion_abandons_but_accounts(served):
+    # arm more gather errors than retries: the first batch must be abandoned,
+    # yet every request still lands in a bucket
+    faults = serve.FaultSpec.parse("gather@0.0:10,retries=2")
+    fe = _frontend(served, faults=faults)
+    cfg = served[0]
+    reqs = serve.generate(
+        serve.ArrivalSpec(rate_rps=300, horizon_s=0.5, seed=2), cfg
+    )
+    rep = fe.run(reqs)
+    st = rep["requests"]
+    assert st["abandoned"] >= 1
+    assert st["unaccounted"] == 0
+    assert fe.stats.retries >= 2
+
+
+# ---------------------------------------------------------------------------
+# frontend: shedding, deadline batching, accounting
+# ---------------------------------------------------------------------------
+
+def _storm_requests(cfg, seed=4):
+    return serve.generate(serve.ArrivalSpec(
+        rate_rps=300, horizon_s=1.5, deadline_s=0.25, seed=seed,
+        flash=(serve.FlashEpisode(0.4, 0.5, 8.0),),
+    ), cfg)
+
+
+@pytest.mark.parametrize("policy", ["reject_new", "drop_oldest"])
+def test_shed_policies_and_identity(served, policy):
+    cfg = served[0]
+    fe = _frontend(served, shed_policy=policy, queue_cap=16)
+    rep = fe.run(_storm_requests(cfg))
+    st = rep["requests"]
+    assert st["unaccounted"] == 0
+    assert st["shed_total"] > 0          # the flash crowd must overflow cap 16
+    if policy == "reject_new":
+        assert st["shed_reject"] > 0 and st["shed_evict"] == 0
+    else:
+        assert st["shed_evict"] > 0 and st["shed_reject"] == 0
+    assert st["served"] > 0
+    assert rep["shed_rate"] == pytest.approx(st["shed_total"] / st["generated"])
+
+
+def test_deadline_batching_closes_partial_batches(served):
+    cfg = served[0]
+    # sparse trickle: arrivals far apart, so full batches never assemble —
+    # the assembly timeout must close singletons instead of waiting forever
+    fe = _frontend(served, batch_size=8)
+    reqs = serve.generate(serve.ArrivalSpec(rate_rps=20, horizon_s=1.0, seed=6), cfg)
+    assert len(reqs) < 8 * 4             # genuinely sparse
+    rep = fe.run(reqs)
+    st = rep["requests"]
+    assert st["unaccounted"] == 0
+    assert st["served"] == st["generated"]          # nothing shed or missed
+    assert fe.stats.batches >= max(2, len(reqs) // 8)
+    # served latency bounded by assembly window + service, well under deadline
+    assert rep["req_lat_p99_s"] < 0.25
+
+
+def test_frontend_report_shape(served):
+    cfg = served[0]
+    fe = _frontend(served)
+    rep = fe.run(_storm_requests(cfg))
+    for key in ("requests", "deadline_miss_rate", "shed_rate", "virtual_qps",
+                "req_lat_p99_s", "batch_lat_p99_s", "hit_rate", "degrade",
+                "recoveries_s", "time_to_recover_s", "faults_injected",
+                "calibration", "slo"):
+        assert key in rep, key
+    assert rep["calibration"]["service_mode"] == "fixed"
+    assert rep["slo"]["observations"] == fe.stats.batches
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_steps_down_and_recovers_under_chaos(served):
+    cfg = served[0]
+    faults = serve.FaultSpec.parse("stall@0.6:0.5,replica@0.8:0.3")
+    fe = _frontend(served, faults=faults)
+    rep = fe.run(serve.generate(serve.ArrivalSpec(
+        rate_rps=300, horizon_s=2.0, deadline_s=0.25, seed=11), cfg))
+    trs = rep["degrade"]["transitions"]
+    assert any(t["from"] == "full" for t in trs), "ladder never stepped down"
+    assert rep["degrade"]["rung"] == "full", "ladder did not fully recover"
+    assert rep["time_to_recover_s"] is not None
+    assert rep["requests"]["unaccounted"] == 0
+    # the replica outage must clamp the ladder at the policy floor:
+    # while hosts were lost, no transition lands above pertable
+    floor = RUNGS.index(fe.ladder.policy.floor_on_replica_loss)
+    lost_window = [t for t in trs if t["reason"] == "replica_loss"]
+    if lost_window:
+        assert RUNGS.index(lost_window[0]["to"]) >= floor
+
+
+def test_ladder_hysteresis_and_probe(served):
+    cfg, params, state = served
+    ladder = serve.DegradationLadder(
+        state, params,
+        serve.DegradePolicy(enter_burn=5.0, hysteresis_batches=3,
+                            probe_after=2),
+    )
+    # sustained burn: steps are spaced by the hysteresis, never back-to-back
+    for i in range(12):
+        ladder.on_batch(batch_i=i, now_s=float(i), fast_burn=50.0)
+    batches = [t["at_batch"] for t in ladder.transitions]
+    assert all(b2 - b1 >= 3 for b1, b2 in zip(batches, batches[1:]))
+    assert ladder.rung == "shed"
+    # recovery: probe_after good batches per rung, one rung at a time
+    start = 100
+    for i in range(start, start + 40):
+        ladder.on_batch(batch_i=i, now_s=float(i), fast_burn=0.0)
+        if ladder.rung == "full":
+            break
+    assert ladder.rung == "full"
+    ups = [t for t in ladder.transitions if "recovery" in t["reason"]]
+    assert len(ups) == len(RUNGS) - 1
+
+
+def test_ladder_replica_floor_blocks_recovery(served):
+    cfg, params, state = served
+    ladder = serve.DegradationLadder(state, params)
+    # replica loss forces the floor immediately (bypasses hysteresis)
+    ladder.on_batch(batch_i=0, now_s=0.0, fast_burn=0.0, replica_lost=True)
+    assert ladder.rung == "pertable"
+    # good batches cannot probe above the floor while the replica is lost
+    for i in range(1, 20):
+        ladder.on_batch(batch_i=i, now_s=float(i), fast_burn=0.0,
+                        replica_lost=True)
+    assert ladder.rung == "pertable"
+    # replica returns: recovery resumes to full
+    for i in range(20, 60):
+        ladder.on_batch(batch_i=i, now_s=float(i), fast_burn=0.0)
+        if ladder.rung == "full":
+            break
+    assert ladder.rung == "full"
+
+
+# ---------------------------------------------------------------------------
+# ladder numerics: rung parity
+# ---------------------------------------------------------------------------
+
+def _parity_setup(served, batch=8, seed=0):
+    cfg, params, state = served
+    from repro.data import synthetic
+
+    b = synthetic.dlrm_batch(cfg, batch, seed=seed, step=1)
+    idx = np.asarray(b["idx"])
+    ladder = serve.DegradationLadder(state, params)
+    scheds = state.fresh_schedulers()
+    fe = serve.Frontend(cfg, serve.FrontendConfig(batch_size=batch),
+                        state, params)
+    rows = fe._rows_for(idx)
+    # stage the cache so the full rung actually takes hits
+    for t in range(cfg.num_tables):
+        scheds[t].prefetch(rows[:, t])
+    return cfg, params, ladder, scheds, idx, rows
+
+
+def _rung_pooled(ladder, rung, idx, rows, scheds):
+    ladder.rung_i = RUNGS.index(rung)
+    return np.asarray(ladder.pooled(idx, rows, scheds))
+
+
+def test_kernel_rungs_bitwise_identical_single_chip(served):
+    _, _, ladder, scheds, idx, rows = _parity_setup(served)
+    full = _rung_pooled(ladder, "full", idx, rows, scheds)
+    assert np.asarray(
+        scheds[0].slots_for(rows[:, 0], record=False) >= 0
+    ).any(), "cache took no hits; the parity check would be vacuous"
+    nocache = _rung_pooled(ladder, "nocache", idx, rows, scheds)
+    pertable = _rung_pooled(ladder, "pertable", idx, rows, scheds)
+    # the paper's degradation contract: dropping the cache or the shared
+    # layout must not change a single bit of the pooled output
+    assert full.dtype == nocache.dtype == pertable.dtype
+    assert np.array_equal(full, nocache)
+    assert np.array_equal(full, pertable)
+
+
+def test_baseline_rung_matches_reference(served):
+    cfg, params, ladder, scheds, idx, rows = _parity_setup(served)
+    full = _rung_pooled(ladder, "full", idx, rows, scheds)
+    base = _rung_pooled(ladder, "baseline", idx, rows, scheds)
+    # bitwise vs the engine's own jnp reference (same numeric program)
+    ref = np.asarray(embedding_bag.multi_bag_lookup(
+        params["tables"], idx, list(served[2].bags)
+    ))
+    assert np.array_equal(base, ref)
+    # float-tolerance vs the kernel rungs (different program, by design)
+    np.testing.assert_allclose(
+        base.astype(np.float32), full.astype(np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_rung_parity_on_8_device_mesh(mesh_runner):
+    mesh_runner("""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro import serve
+from repro.configs import registry
+from repro.core import embedding_bag
+from repro.data import synthetic
+from repro.launch.serve_rec import build_serve_state
+from repro.models import dlrm
+from repro.serve.degrade import RUNGS
+
+assert jax.device_count() == 8
+cfg = registry.get_dlrm("dlrm-qr-smoke")
+params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+state = build_serve_state(cfg, shards=4, alpha=1.05, seed=0)
+b = synthetic.dlrm_batch(cfg, 8, seed=0, step=1)
+idx = np.asarray(b["idx"])
+ladder = serve.DegradationLadder(state, params)
+scheds = state.fresh_schedulers()
+fe = serve.Frontend(cfg, serve.FrontendConfig(batch_size=8), state, params)
+rows = fe._rows_for(idx)
+for t in range(cfg.num_tables):
+    scheds[t].prefetch(rows[:, t])
+
+def rung(name):
+    ladder.rung_i = RUNGS.index(name)
+    return np.asarray(ladder.pooled(idx, rows, scheds))
+
+full = rung("full")
+assert np.array_equal(full, rung("nocache")), "nocache diverged on mesh"
+assert np.array_equal(full, rung("pertable")), "pertable diverged on mesh"
+base = rung("baseline")
+
+# the sharded GSPMD baseline (the bottom rung's production form) agrees
+# bitwise with the ladder's single-chip jnp program
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+gspmd = state.engine.baseline(mesh)
+out = np.asarray(gspmd(params["tables"], idx))
+assert np.array_equal(base, out), "sharded baseline diverged"
+print("MESH_PARITY_OK")
+""", n_devices=8)
+
+
+def test_recovery_times_helper():
+    trs = [
+        {"from": "full", "to": "nocache", "t_s": 1.0},
+        {"from": "nocache", "to": "pertable", "t_s": 1.5},
+        {"from": "pertable", "to": "nocache", "t_s": 2.0},
+        {"from": "nocache", "to": "full", "t_s": 3.0},
+        {"from": "full", "to": "nocache", "t_s": 5.0},   # unfinished episode
+    ]
+    assert recovery_times(trs) == [2.0]
+    assert recovery_times([]) == []
+
+
+# ---------------------------------------------------------------------------
+# chaos end-to-end (the CI gate's assertion set)
+# ---------------------------------------------------------------------------
+
+def test_chaos_storm_end_to_end(served):
+    cfg = served[0]
+    faults = serve.FaultSpec.parse(
+        "stall@0.5:0.5,drop@0.6,replica@0.8:0.3,gather@1.2:1,retries=3"
+    )
+    fe = _frontend(served, faults=faults)
+    reqs = serve.generate(serve.ArrivalSpec(
+        rate_rps=300, horizon_s=2.0, deadline_s=0.25, seed=13,
+        flash=(serve.FlashEpisode(0.4, 0.4, 6.0),),
+    ), cfg)
+    rep = fe.run(reqs)
+    st = rep["requests"]
+    # 1. the run completes with zero unaccounted requests
+    assert st["unaccounted"] == 0
+    assert st["generated"] == len(reqs)
+    # 2. at least one ladder step-down and a full recovery
+    trs = rep["degrade"]["transitions"]
+    assert any(RUNGS.index(t["to"]) > RUNGS.index(t["from"]) for t in trs)
+    assert rep["degrade"]["rung"] == "full"
+    assert rep["time_to_recover_s"] is not None and rep["time_to_recover_s"] > 0
+    # 3. the report carries p99 / shed rate / time-to-recover
+    assert rep["req_lat_p99_s"] > 0
+    assert 0 <= rep["shed_rate"] < 1
+    # 4. every scheduled fault actually latched
+    assert fe.faults.exhausted()
+    assert fe.stats.stall_s_injected == pytest.approx(0.5)
