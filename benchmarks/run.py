@@ -23,6 +23,7 @@ SUITES = {
     "collision_sweep": collision_sweep.run,  # paper: shortcoming analyses
     "tt_sweep": tt_sweep.run,          # paper: TT rank/factorization trade-off
     "cache_sim": cache_sim.run,        # paper: SRAM cache + duplication sweep
+    "cache_drift": cache_sim.run_drift,  # online adaptation: hot-set rotation
     "serve_qps": serve_qps.run,        # measured QPS: packed megakernel pipeline
     "serve_storm": serve_storm.run,    # resilient front end: flash crowds + chaos
     "roofline": roofline.run,          # deliverable (g)

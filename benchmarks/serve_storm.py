@@ -54,6 +54,61 @@ def _scenarios(horizon_s: float, seed: int) -> list[tuple[str, str, str]]:
     ]
 
 
+def _drift_scenario(cfg, params, state, *, horizon_s: float, seed: int,
+                    tiny: bool) -> None:
+    """Hot-set drift through the front end: frozen pin vs online adaptation.
+
+    Both arms serve **pinned** residency (the steady-state configuration —
+    the oracle prefetcher would self-heal and hide the drift); the adaptive
+    arm adds the sketch->trigger->re-pin controller.  The emitted gap is the
+    hit rate the adaptation subsystem buys back under rotation.
+    """
+    from repro.adapt import AdaptController, AdaptPolicy
+
+    h = horizon_s
+    arrival = (
+        f"rate=300,horizon={h},deadline_ms=250,"
+        f"drift_s={0.3 * h:.2f},drift_frac=0.3,seed={seed}"
+    )
+    aspec = serve.ArrivalSpec.parse(arrival)
+    reports = {}
+    for arm in ("frozen", "adaptive"):
+        adapt = None
+        if arm == "adaptive":
+            adapt = AdaptController(
+                state.eplan,
+                policy=AdaptPolicy(check_every=4, min_batches=8,
+                                   min_gain=0.08, cooldown_batches=4),
+                sketch_kw=dict(window_batches=4, windows=4, decay=0.3),
+                seed=seed,
+            )
+        fcfg = serve.FrontendConfig(
+            batch_size=8, queue_cap=48, residency="pinned",
+            service_mode="fixed" if tiny else "measured",
+        )
+        frontend = serve.Frontend(cfg, fcfg, state, params, adapt=adapt)
+        reports[arm] = frontend.run(serve.generate(aspec, cfg))
+
+    gap = reports["adaptive"]["hit_rate"] - reports["frozen"]["hit_rate"]
+    events = reports["adaptive"].get("adapt", {}).get("event_log", [])
+    for arm, report in reports.items():
+        common.emit(
+            f"serve_storm/drift/{arm}",
+            report["req_lat_p99_s"] * 1e6,
+            f"hit_rate={report['hit_rate']:.3f} "
+            f"served={report['requests']['served']} "
+            + (f"replans={len(events)} adaptive_gap={gap:+.3f}"
+               if arm == "adaptive" else "(pinned, no adaptation)"),
+            extra={
+                "scenario": "drift", "arm": arm, "seed": seed,
+                "arrival": aspec.describe(),
+                "hit_rate": report["hit_rate"],
+                "adaptive_gap": gap,
+                **({"adapt_events": events} if arm == "adaptive" else {}),
+            },
+        )
+
+
 def run(tiny: bool = False, seed: int = 0) -> None:
     cfg = registry.get_dlrm("dlrm-qr-smoke")
     params, _ = dlrm.init_dlrm(jax.random.PRNGKey(seed), cfg)
@@ -115,6 +170,9 @@ def run(tiny: bool = False, seed: int = 0) -> None:
                 f"serve_storm/{name}: {req['unaccounted']} unaccounted "
                 f"requests — the front end's conservation law is broken"
             )
+
+    _drift_scenario(cfg, params, state, horizon_s=horizon, seed=seed,
+                    tiny=tiny)
 
 
 if __name__ == "__main__":

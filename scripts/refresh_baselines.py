@@ -18,7 +18,7 @@ import os
 import subprocess
 import sys
 
-SUITES = ("serve_qps", "cache_sim")
+SUITES = ("serve_qps", "cache_sim", "cache_drift")
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_DIR = os.path.join(REPO, "benchmarks", "baselines")
 

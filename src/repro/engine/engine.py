@@ -55,6 +55,10 @@ from repro.engine.spec import EngineSpec
 def _serve_gather_jit(packed, idx, slot, cache_rows, plan: EmbeddingPlan):
     from repro.kernels import ops
 
+    # Trace-time bump: a counter inside a jitted body counts *traces*, not
+    # calls, so this is the compiled-program count for the serving dispatch.
+    # The online re-planner's runtime-arg swaps must leave it at 1.
+    obs.inc("engine/compile/serve_gather")
     layout = plan.layout
     streams = packed_tables.pack_indices(idx, layout)
     streams["slot"] = packed_tables.global_slots(slot, layout)

@@ -77,6 +77,9 @@ class EmbeddingPlan:
     )
     values: tuple = dataclasses.field(default=(), compare=False, repr=False)
     locality: tuple = dataclasses.field(default=(), compare=False, repr=False)
+    # per-table logical-id access profile (the trace's popularity counts) —
+    # the plan's own notion of "hot"; the online re-planner pins against it
+    counts: tuple = dataclasses.field(default=(), compare=False, repr=False)
 
     @property
     def bags(self):
@@ -231,4 +234,5 @@ def plan(
         dup=dup,
         values=tuple(values) if values is not None else (),
         locality=tuple(locs),
+        counts=tuple(counts) if counts is not None else (),
     )

@@ -378,11 +378,21 @@ def run_frontend(cfg, state, params, args, slo_engine=None) -> dict:
         batch_size=args.batch or (8 if args.tiny else 16),
         queue_cap=args.queue_cap,
         shed_policy=args.shed_policy,
+        queue_order=args.queue_order,
+        # adaptation adapts *pinned* residency; the oracle prefetcher would
+        # self-heal under drift and mask what the controller does
+        residency="pinned" if args.adapt else "prefetch",
         service_mode=args.service_mode,
     )
+    adapt_ctl = None
+    if args.adapt:
+        from repro.adapt import AdaptController
+
+        adapt_ctl = AdaptController(state.eplan, seed=args.seed)
     frontend = serve.Frontend(
         cfg, fcfg, state, params,
         slo=slo_engine, faults=serve.FaultInjector(fspec),
+        adapt=adapt_ctl,
     )
     requests = serve.generate(aspec, cfg)
     report = frontend.run(requests)
@@ -418,6 +428,9 @@ def run_frontend(cfg, state, params, args, slo_engine=None) -> dict:
         f"{len(deg['transitions'])} transitions, time-to-recover "
         f"{'%.2fs' % ttr if ttr is not None else 'n/a'}"
     )
+    if adapt_ctl is not None:
+        print(f"[adapt] {adapt_ctl.batch_i} batches sketched, "
+              f"events {report['adapt']['events'] or '{}'}")
     return report
 
 
@@ -477,6 +490,18 @@ def main(argv=None) -> int:
                     help="virtual service time: calibrated from measured "
                          "wall ('measured') or exactly one unit per batch "
                          "('fixed' — the deterministic CI configuration)")
+    ap.add_argument("--queue-order", default="fifo", choices=["fifo", "edf"],
+                    help="admission-queue dispatch order: arrival order or "
+                         "deadline-earliest-first")
+    ap.add_argument("--adapt", action="store_true",
+                    help="online adaptation (repro.adapt): frequency "
+                         "sketches + incremental re-pinning; standalone it "
+                         "runs the pinned adaptive session, with --frontend "
+                         "it feeds the admission loop's schedulers")
+    ap.add_argument("--drift", default=None, metavar="SPEC",
+                    help="batch-indexed hot-set drift for the --adapt "
+                         "session, e.g. 'period=8,frac=0.25' (rotations "
+                         "every `period` batches)")
     args = ap.parse_args(argv)
 
     telemetry = bool(args.metrics_json or args.trace_out or args.slo
@@ -548,6 +573,53 @@ def main(argv=None) -> int:
             with open(args.metrics_json, "w") as f:
                 json.dump(snap, f, indent=1)
             print(f"# wrote metric registry to {args.metrics_json}")
+        return 0
+
+    if args.adapt:
+        from repro.adapt import DriftSchedule
+        from repro.adapt.loop import serve_adaptive
+
+        schedule = (DriftSchedule.parse(args.drift) if args.drift
+                    else DriftSchedule(seed=args.seed))
+        res = serve_adaptive(
+            cfg, batch=batch, batches=args.batches, alpha=args.alpha,
+            seed=args.seed, state=state, params=params,
+            schedule=schedule, refit=True,
+        )
+        print(
+            f"[adaptive] served {res['served']} requests in "
+            f"{res['wall_s']:.2f}s -> {res['qps']:.1f} QPS, hit rate "
+            f"{res['hit_rate']:.3f} (pinned residency)"
+        )
+        hs = res["hit_series"]
+        print(f"[adaptive] hit-rate trajectory first->last: "
+              f"{hs[0]:.3f} -> {hs[-1]:.3f} over {len(hs)} batches, "
+              f"drift {res['schedule']}")
+        for ev in res["events"]:
+            print(f"[adapt] batch {ev['batch']}: {ev['kind']} "
+                  f"(gain {ev.get('gain', 'n/a')})")
+        if not res["events"]:
+            print("[adapt] no re-plan events (policy held)")
+        record = {k: v for k, v in res.items()
+                  if k not in _RECORD_DROP and k != "hit_series"}
+        record["hit_first"], record["hit_last"] = hs[0], hs[-1]
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump([record], f, indent=1)
+            print(f"# wrote adaptive record to {args.json}")
+        if args.metrics_json:
+            snap = obs.snapshot().to_json()
+            snap["config"] = cfg.name
+            snap["adaptive"] = record
+            with open(args.metrics_json, "w") as f:
+                json.dump(snap, f, indent=1)
+            print(f"# wrote metric registry to {args.metrics_json}")
+        if args.trace_out:
+            obs.tracer().write(
+                args.trace_out,
+                metadata={"config": cfg.name, "modes": ["adaptive"]},
+            )
+            print(f"# wrote Chrome trace to {args.trace_out}")
         return 0
 
     modes = ["sequential", "overlap"] if args.mode == "both" else [args.mode]

@@ -31,6 +31,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.adapt import schedule as schedule_mod
 from repro.data import synthetic
 
 
@@ -178,11 +179,14 @@ def _arrival_times(spec: ArrivalSpec, rng: np.random.Generator) -> np.ndarray:
 
 
 def drift_offset(spec: ArrivalSpec, t_s: float, vocab: int) -> int:
-    """Vocab rotation of the Zipf hot set at virtual time ``t_s``."""
-    if spec.drift_period_s <= 0:
-        return 0
-    period = int(t_s / spec.drift_period_s)
-    return (period * int(spec.drift_fraction * vocab)) % max(1, vocab)
+    """Vocab rotation of the Zipf hot set at virtual time ``t_s``.
+
+    Delegates to the shared drift-schedule law (`repro.adapt.schedule`) —
+    the arrival generator and the drift benchmarks rotate identically.
+    """
+    return schedule_mod.rotation_offset(
+        t_s, spec.drift_period_s, spec.drift_fraction, vocab
+    )
 
 
 def generate(spec: ArrivalSpec, cfg) -> list[Request]:

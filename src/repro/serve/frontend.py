@@ -55,6 +55,8 @@ class FrontendConfig:
     batch_size: int = 8
     queue_cap: int = 64
     shed_policy: str = "reject_new"      # reject_new | drop_oldest
+    queue_order: str = "fifo"            # fifo | edf (deadline-earliest-first)
+    residency: str = "prefetch"          # prefetch (oracle) | pinned (static)
     assembly_timeout_s: float = 0.02     # close a partial batch after this wait
     service_unit_s: float = 0.01         # virtual service per calibrated batch
     service_mode: str = "measured"       # measured | fixed (CI determinism)
@@ -63,6 +65,10 @@ class FrontendConfig:
     def __post_init__(self):
         if self.shed_policy not in ("reject_new", "drop_oldest"):
             raise ValueError(f"unknown shed policy {self.shed_policy!r}")
+        if self.queue_order not in ("fifo", "edf"):
+            raise ValueError(f"unknown queue order {self.queue_order!r}")
+        if self.residency not in ("prefetch", "pinned"):
+            raise ValueError(f"unknown residency {self.residency!r}")
         if self.service_mode not in ("measured", "fixed"):
             raise ValueError(f"unknown service mode {self.service_mode!r}")
         if self.batch_size <= 0 or self.queue_cap <= 0:
@@ -116,7 +122,7 @@ class Frontend:
 
     def __init__(self, cfg, fcfg: FrontendConfig, state, params, *,
                  slo=None, faults: FaultInjector | None = None,
-                 policy: DegradePolicy | None = None):
+                 policy: DegradePolicy | None = None, adapt=None):
         self.cfg = cfg
         self.fcfg = fcfg
         self.state = state
@@ -124,11 +130,32 @@ class Frontend:
         self.slo = slo
         self.faults = faults or FaultInjector(FaultSpec())
         self.ladder = DegradationLadder(state, params, policy)
-        self.scheds = state.fresh_schedulers()
+        # optional online adaptation: an ``repro.adapt.AdaptController`` fed
+        # per dispatched batch; its re-plans re-pin residency (pinned) or
+        # refresh the schedulers' value arrays (prefetch) in place — runtime
+        # args only, the compiled rungs are untouched
+        self.adapt = adapt
+        self.scheds = self._fresh_residency()
         self.stats = FrontendStats()
         self._emb = state.bags[0].emb
         self._s0 = fcfg.service_unit_s        # wall seconds per service unit
         self._calibrated = False
+
+    def _fresh_residency(self):
+        """New cache state per the configured residency mode.
+
+        ``prefetch`` is the oracle next-batch scheduler; ``pinned`` is static
+        residency pinned to the offline plan's bet
+        (:func:`repro.adapt.replan.pinned_from_plan`) — the mode online
+        adaptation exists to keep honest under drift.
+        """
+        if self.fcfg.residency == "pinned":
+            from repro.adapt import replan
+
+            eplan = (self.adapt.eplan if self.adapt is not None
+                     else self.state.eplan)
+            return replan.pinned_from_plan(eplan)
+        return self.state.fresh_schedulers()
 
     # -- execution ------------------------------------------------------------
 
@@ -180,7 +207,7 @@ class Frontend:
                 walls.append(self._dispatch_wall(idx, dense, rows))
         self._s0 = float(np.median(walls))
         self._calibrated = True
-        self.scheds = self.state.fresh_schedulers()
+        self.scheds = self._fresh_residency()
         return self._s0
 
     def _service_s(self, wall_s: float) -> float:
@@ -267,8 +294,7 @@ class Frontend:
                     continue                 # admit the arrival first
                 now = max(now, close_t)      # window expired: dispatch partial
 
-            batch = [queue.popleft()
-                     for _ in range(min(fcfg.batch_size, len(queue)))]
+            batch = self._take_batch(queue)
             done = self._dispatch_batch(batch, batch_i, now)
             if done is not None:
                 now, blat = done
@@ -286,6 +312,29 @@ class Frontend:
 
         return self._report(req_lat, batch_lat, now)
 
+    def _take_batch(self, queue: collections.deque) -> list[Request]:
+        """Pop the next batch per the configured queue order.
+
+        ``fifo`` serves arrival order; ``edf`` picks the ``batch_size``
+        requests with the earliest absolute deadlines (ties broken by
+        arrival) — urgent requests jump the line, so under backlog the
+        requests most likely to miss are exactly the ones dispatched first.
+        Removal keeps the deque arrival-ordered either way, so the
+        size-or-deadline assembly window (anchored at ``queue[0]``) and
+        ``drop_oldest`` eviction are unaffected.
+        """
+        k = min(self.fcfg.batch_size, len(queue))
+        if self.fcfg.queue_order == "fifo":
+            return [queue.popleft() for _ in range(k)]
+        picks = sorted(
+            range(len(queue)),
+            key=lambda i: (queue[i].deadline_s, queue[i].t_arrive_s),
+        )[:k]
+        batch = [queue[i] for i in picks]
+        for i in sorted(picks, reverse=True):
+            del queue[i]
+        return batch
+
     def _dispatch_batch(self, batch: list[Request], batch_i: int,
                         now: float):
         """Dispatch with retry/backoff; returns (completion_s, batch_latency)
@@ -299,6 +348,8 @@ class Frontend:
         dense = np.stack([r.dense for r in batch]
                          + [batch[-1].dense] * (B - len(batch)))
         rows = self._rows_for(idx)
+        if self.adapt is not None:          # sketch feed: O(bag) per batch
+            self.adapt.observe(idx)
 
         self.faults.advance(now)
         stall = self.faults.consume_stall_s()
@@ -351,6 +402,9 @@ class Frontend:
         obs.observe_batch(batch=batch_i, mode="frontend", latency_s=blat)
         self.ladder.on_batch(batch_i=batch_i, now_s=done, alerts=alerts,
                              fast_burn=fast, replica_lost=replica_lost)
+        if self.adapt is not None:
+            self.adapt.step(self.scheds)
+            self.adapt.maybe_refit(getattr(self.state, "drift", None))
         return done, blat
 
     # -- report ---------------------------------------------------------------
@@ -384,6 +438,10 @@ class Frontend:
             },
             "frontend": self.fcfg.describe(),
         }
+        if self.adapt is not None:
+            report["adapt"] = {
+                **self.adapt.summary(), "event_log": list(self.adapt.events),
+            }
         if self.slo is not None:
             report["slo"] = self.slo.state()
         return report

@@ -1,0 +1,350 @@
+"""Online adaptation: sketches, incremental re-planning, drift-triggered refit.
+
+The load-bearing claims:
+
+* the count-min sketch NEVER underestimates and its overestimate stays
+  inside the classic eps*N bound on a Zipf stream; heavy-hitter recall at
+  the defaults clears the pinning bar; expired hot sets actually leave the
+  sliding-window estimate;
+* the drift law is single-sourced: the arrival generator and the
+  adaptation benchmarks rotate hot sets through the same seeded helper;
+* an incremental re-pin is a pure runtime-arg mutation — shapes frozen,
+  **no recompile** (the engine's trace-time counter stays at one program)
+  — and the adaptive session's logits are bitwise identical to the
+  non-adaptive pipeline on the same index stream;
+* the policy holds on stationary traffic and fires under rotation, and a
+  drifted cost model (``DriftMonitor.refit_recommended``) re-fits the tuner
+  and re-plans mid-serve, visible as obs counters + instant events.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.adapt.policy import AdaptController, AdaptPolicy
+from repro.adapt.replan import (
+    PinnedCache, big_id_map, coverage, fold_to_big, incremental_update,
+    pinned_from_plan, top_rows,
+)
+from repro.adapt.schedule import DriftSchedule, drifting_zipf_batches
+from repro.adapt.sketch import CountMinSketch, FrequencySketch, SpaceSaving
+from repro.configs import registry
+from repro.data.synthetic import zipf_trace
+from repro.launch.serve_rec import build_serve_state, run_pipeline
+from repro.models import dlrm
+from repro.serve import arrival
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One offline pass shared by the module (plan+compile is slow)."""
+    cfg = registry.get_dlrm("dlrm-qr-smoke")
+    params, _ = dlrm.init_dlrm(jax.random.PRNGKey(0), cfg)
+    state = build_serve_state(cfg, shards=1, alpha=1.05, seed=0)
+    return cfg, params, state
+
+
+@pytest.fixture
+def metrics():
+    """Fresh obs session per test (counters + tracer), always disabled after."""
+    obs.enable(reset=True)
+    try:
+        yield
+    finally:
+        obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# sketch accuracy
+# ---------------------------------------------------------------------------
+
+def test_cms_one_sided_error_on_zipf():
+    vocab, width = 2048, 1024
+    stream = zipf_trace(vocab, 20_000, alpha=1.05, seed=3)
+    cms = CountMinSketch(width=width, depth=4, seed=1)
+    for chunk in np.array_split(stream, 20):
+        cms.update(chunk)
+    truth = np.bincount(stream, minlength=vocab)
+    est = cms.estimate(np.arange(vocab))
+    over = est - truth
+    assert over.min() >= 0, "count-min must never underestimate"
+    # classic bound: overestimate <= e/width * N per depth row w.h.p.;
+    # conservative update only tightens it.  4x slack keeps this seed-proof.
+    assert over.max() <= 4 * np.e * cms.total / width
+    assert cms.total == stream.size
+
+
+def test_cms_estimate_exact_when_unique_fits():
+    cms = CountMinSketch(width=4096, depth=4, seed=0)
+    keys = np.arange(64)
+    cms.update(np.repeat(keys, 5))
+    assert np.array_equal(cms.estimate(keys), np.full(64, 5))
+
+
+def test_heavy_hitter_recall_at_defaults():
+    vocab, want = 4096, 32
+    sk = FrequencySketch(vocab, seed=2)          # default topk=256
+    stream = zipf_trace(vocab, 32 * 512, alpha=1.05, seed=11)
+    for chunk in stream.reshape(32, 512):
+        sk.update(chunk)
+    exact = set(np.argsort(-np.bincount(stream, minlength=vocab),
+                           kind="stable")[:want].tolist())
+    got = set(sk.top_rows(want).tolist())
+    recall = len(exact & got) / want
+    assert recall >= 0.9, f"heavy-hitter recall {recall:.2f} < 0.9"
+
+
+def test_space_saving_capacity_and_error_floor():
+    ss = SpaceSaving(capacity=4)
+    ss.update(np.array([1, 1, 1, 2, 2, 3, 3, 4]))
+    ss.update(np.array([5, 5, 5, 5, 5]))          # evicts the current min
+    assert len(ss.counts) == 4
+    top = ss.top(2)
+    assert top[0][0] == 5
+    assert ss.errors[5] > 0                        # inherited the evict floor
+
+
+def test_window_decay_forgets_expired_hot_set():
+    sk = FrequencySketch(256, windows=2, window_batches=2, decay=0.5, seed=0)
+    hot_a = np.arange(0, 16)
+    hot_b = np.arange(128, 144)
+    for _ in range(4):                             # fills both windows with A
+        sk.update(np.repeat(hot_a, 8))
+    assert sk.estimate(hot_a).min() > 0
+    for _ in range(4):                             # ...then B pushes A out
+        sk.update(np.repeat(hot_b, 8))
+    assert sk.estimate(hot_a).max() == 0, "expired hot set must leave"
+    assert sk.estimate(hot_b).min() > 0
+    assert sk.top_rows(8).size > 0                 # heavy decays but survives
+
+
+# ---------------------------------------------------------------------------
+# drift schedule (single-sourced law)
+# ---------------------------------------------------------------------------
+
+def test_arrival_drift_offset_matches_schedule_law():
+    spec = arrival.ArrivalSpec(rate_rps=100, horizon_s=4.0,
+                               drift_period_s=1.5, drift_fraction=0.25)
+    sched = DriftSchedule(period=1.5, fraction=0.25)
+    for t in (0.0, 0.4, 1.5, 2.2, 3.7, 9.0):
+        assert arrival.drift_offset(spec, t, 4096) == sched.offset_at(t, 4096)
+
+
+def test_drifting_zipf_batches_deterministic_and_rotates():
+    sched = DriftSchedule(period=2.0, fraction=0.25, seed=9)
+    a = drifting_zipf_batches(1024, 6, 128, schedule=sched, seed=9)
+    b = drifting_zipf_batches(1024, 6, 128, schedule=sched, seed=9)
+    assert np.array_equal(a, b), "same seed must reproduce bitwise"
+    flat = drifting_zipf_batches(
+        1024, 6, 128, schedule=DriftSchedule(period=0.0, seed=9), seed=9
+    )
+    step = int(0.25 * 1024)
+    for t in range(6):
+        off = sched.offset_at(t, 1024)
+        assert off == (step * (t // 2)) % 1024
+        assert np.array_equal(a[t], (flat[t] + off) % 1024)
+
+
+def test_drift_schedule_parse_and_describe():
+    s = DriftSchedule.parse("period=8,frac=0.3,seed=4")
+    assert (s.period, s.fraction, s.seed) == (8.0, 0.3, 4)
+    assert not s.stationary
+    assert DriftSchedule.parse("").stationary
+    assert s.describe()["period"] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# incremental re-planning
+# ---------------------------------------------------------------------------
+
+def test_pinned_cache_swap_semantics():
+    c = PinnedCache(16, 4, rows=np.array([1, 2, 3, 4]))
+    assert c.stats.staged_rows == 4
+    slots = c.slots_for(np.array([1, 4, 9]))
+    assert (slots >= 0).tolist() == [True, True, False]
+    assert c.stats.hits == 2 and c.stats.accesses == 3
+    # re-pin keeps surviving residents in their slots; only the diff stages
+    keep_slot = {int(r): s for s, r in enumerate(c.slot_rows)}
+    staged = c.pin(np.array([3, 4, 5, 6]))
+    assert staged == 2
+    assert int(c.slot_map[3]) == keep_slot[3]
+    assert int(c.slot_map[4]) == keep_slot[4]
+    assert set(c.pinned_rows().tolist()) == {3, 4, 5, 6}
+    # shapes are frozen: this is what keeps the jit key stable
+    assert c.slot_rows.shape == (4,) and c.cache_rows().dtype == np.int32
+    assert c.cache_rows().min() >= 0
+    assert c.prefetch(np.arange(4)) == 0
+
+
+def test_pinned_cache_dedup_and_truncate():
+    c = PinnedCache(16, 3)
+    staged = c.pin(np.array([7, 7, 2, 9, 11]))     # dup dropped, overflow cut
+    assert staged == 3
+    assert set(c.pinned_rows().tolist()) == {7, 2, 9}
+
+
+def test_incremental_update_math_and_apply():
+    est = [np.array([5.0, 1.0, 3.0, 0.0]), np.array([0.0, 8.0, 2.0, 0.0])]
+    upd = incremental_update(est, (2, 1))
+    assert upd.rows[0].tolist() == [0, 2]
+    assert upd.rows[1].tolist() == [1]
+    assert upd.predicted_hit == pytest.approx((5 + 3 + 8) / 19)
+    caches = [PinnedCache(4, 2), PinnedCache(4, 1)]
+    assert upd.apply(caches) == 3
+    assert coverage(est[0], caches[0].pinned_rows()) == pytest.approx(8 / 9)
+
+
+def test_fold_to_big_sums_logical_mass():
+    big_ids = np.array([[0], [1], [0], [2]])
+    folded = fold_to_big(np.array([1.0, 2.0, 3.0, 4.0]), big_ids, 3)
+    assert folded.tolist() == [4.0, 2.0, 4.0]
+
+
+def test_pinned_from_plan_pins_profiled_hot_rows(served):
+    cfg, _params, state = served
+    caches = pinned_from_plan(state.eplan)
+    assert len(caches) == cfg.num_tables
+    for t, cache in enumerate(caches):
+        budget = state.eplan.slot_budgets[t]
+        assert cache.pinned_rows().size == min(budget, cache.num_rows)
+        # the pin is the plan's own profiled popularity, folded to big rows
+        emb = state.eplan.bags[t].emb
+        hot = fold_to_big(
+            np.asarray(state.eplan.counts[t], dtype=np.float64),
+            big_id_map(emb), cache.num_rows,
+        )
+        want = set(top_rows(hot, budget).tolist())
+        assert set(cache.pinned_rows().tolist()) == want
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+def test_policy_thresholds():
+    pol = AdaptPolicy(min_gain=0.1, horizon_batches=64, swap_cost_batches=1.0,
+                      full_gain=0.3, full_cost_batches=32.0)
+    assert not pol.swap_worthwhile(0.05)           # below the gain floor
+    assert pol.swap_worthwhile(0.12)
+    assert not pol.full_worthwhile(0.12)           # below the full floor
+    assert pol.full_worthwhile(0.6)
+    # payback: gain clears the floor but cannot amortize the cost in-horizon
+    tight = AdaptPolicy(min_gain=0.01, horizon_batches=4, swap_cost_batches=1.0)
+    assert not tight.swap_worthwhile(0.02)
+
+
+def test_controller_holds_stationary_fires_on_rotation(served, metrics):
+    cfg, _params, state = served
+    vocab = state.bags[0].emb.vocab
+    pol = AdaptPolicy(check_every=4, min_batches=8, min_gain=0.08,
+                      cooldown_batches=4)
+    skw = dict(window_batches=4, windows=4, decay=0.3)
+
+    def feed(period):
+        ctl = AdaptController(state.eplan, policy=pol, sketch_kw=skw, seed=0)
+        caches = ctl.fresh_caches()
+        sched = DriftSchedule(period=float(period), fraction=0.3, seed=0)
+        per_table = [
+            drifting_zipf_batches(vocab, 24, 64 * cfg.pooling,
+                                  schedule=sched, seed=7 + t)
+            for t in range(cfg.num_tables)
+        ]
+        for b in range(24):
+            idx = np.stack(
+                [per_table[t][b].reshape(64, cfg.pooling)
+                 for t in range(cfg.num_tables)], axis=1,
+            )
+            ctl.observe(idx)
+            ctl.step(caches)
+        return ctl
+
+    flat = feed(period=0)
+    assert flat.events == [], "stationary traffic must not trigger re-plans"
+    drift = feed(period=8)
+    kinds = [e["kind"] for e in drift.events]
+    assert "replan" in kinds, "a rotated hot set must trigger a re-pin"
+    # cooldown: consecutive checks inside the quiet period are skipped
+    batches = [e["batch"] for e in drift.events]
+    assert all(b2 - b1 >= pol.cooldown_batches
+               for b1, b2 in zip(batches, batches[1:]))
+
+
+# ---------------------------------------------------------------------------
+# the adaptive serving loop (acceptance checks)
+# ---------------------------------------------------------------------------
+
+def test_stationary_logits_bitwise_equal_pipeline(served, metrics):
+    from repro.adapt.loop import serve_adaptive
+    from repro.data import synthetic
+
+    cfg, params, state = served
+    batch, batches = 8, 4
+    ref = run_pipeline(cfg, batch=batch, batches=batches, seed=0,
+                       mode="sequential", state=state, params=params)
+    idx_override = [
+        np.asarray(synthetic.dlrm_batch(cfg, batch, seed=0, step=t)["idx"])
+        for t in range(batches)
+    ]
+    res = serve_adaptive(cfg, batch=batch, batches=batches, seed=0,
+                         state=state, params=params,
+                         idx_override=idx_override)
+    for t in range(batches):
+        assert np.array_equal(np.asarray(ref["logits"][t]),
+                              np.asarray(res["logits"][t])), (
+            f"batch {t}: adaptive logits diverge from the pipeline"
+        )
+
+
+def test_drift_session_replans_without_recompile(served, metrics):
+    from repro.adapt.loop import serve_adaptive
+
+    cfg, params, state = served
+    pol = AdaptPolicy(check_every=4, min_batches=8, min_gain=0.05,
+                      cooldown_batches=4)
+    ctl = AdaptController(state.eplan, policy=pol,
+                          sketch_kw=dict(window_batches=4, windows=4,
+                                         decay=0.3), seed=0)
+    res = serve_adaptive(cfg, batch=16, batches=20, seed=0, state=state,
+                         params=params, controller=ctl,
+                         schedule=DriftSchedule(period=6.0, fraction=0.3))
+    kinds = [e["kind"] for e in res["events"]]
+    assert "replan" in kinds
+    counters = obs.snapshot().counters
+    assert counters.get("serve/adapt/replan", 0) >= 1
+    # the tentpole invariant: every swap reused the SAME compiled program
+    assert counters.get("engine/compile/serve_gather", 0) <= 1, (
+        "incremental re-pins must not retrace serve_gather"
+    )
+    names = [e.get("name") for e in obs.tracer().events]
+    assert "adapt_replan" in names                 # visible in trace/flight
+    assert any(s > 0 for s in res["staged_series"])
+
+
+def test_drift_monitor_refit_replans_mid_serve(served, metrics):
+    from repro.adapt.loop import serve_adaptive
+
+    cfg, params, state = served
+    state = dataclasses.replace(state)             # don't poison the module
+    # constant predictions + alternating measurements: rank agreement 0
+    state.drift = obs.DriftMonitor()
+    for i in range(12):
+        state.drift.observe(1.0, 1.0 if i % 2 else 2.0)
+    state.predicted_s = 1.0
+    assert state.drift.refit_recommended
+    engine_before = state.engine
+    res = serve_adaptive(cfg, batch=8, batches=5, seed=0, state=state,
+                         params=params, refit=True,
+                         refit_kw=dict(max_samples=2, repeats=1))
+    kinds = [e["kind"] for e in res["events"]]
+    assert "refit" in kinds, "refit_recommended must re-fit mid-serve"
+    assert state.engine is not engine_before       # re-planned + recompiled
+    assert state.drift.n < 12                      # fresh re-armed monitor
+    counters = obs.snapshot().counters
+    assert counters.get("serve/adapt/refit", 0) == 1
+    names = [e.get("name") for e in obs.tracer().events]
+    assert "adapt_refit" in names
+    ev = next(e for e in res["events"] if e["kind"] == "refit")
+    assert "drift" in ev and "knobs" in ev

@@ -12,7 +12,10 @@ from benchmarks import baseline as B
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
-SUITES = ("serve_qps", "cache_sim")
+SUITES = ("serve_qps", "cache_sim", "cache_drift")
+# cache_drift rows come from benchmarks.cache_sim.run_drift, so they share
+# the emitting module's row prefix
+ROW_PREFIX = {"cache_drift": "cache_sim/drift_"}
 
 
 @pytest.mark.parametrize("suite", SUITES)
@@ -25,7 +28,8 @@ def test_committed_baseline_parses(suite):
         assert {"name", "us_per_call", "derived"} <= set(r)
         # satellite: every row carries host metadata
         assert {"backend", "device_kind", "jax_version"} <= set(r)
-    assert any(r["name"].startswith(f"{suite}/") for r in rows)
+    prefix = ROW_PREFIX.get(suite, f"{suite}/")
+    assert any(r["name"].startswith(prefix) for r in rows)
     assert any(r["name"] == f"run/{suite}_wall" and r["us_per_call"] > 0
                for r in rows)
 

@@ -446,3 +446,45 @@ def test_chaos_storm_end_to_end(served):
     # 4. every scheduled fault actually latched
     assert fe.faults.exhausted()
     assert fe.stats.stall_s_injected == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# queue order (fifo vs edf)
+# ---------------------------------------------------------------------------
+
+def _crafted_deadline_trace(cfg):
+    """8 near-simultaneous arrivals: 4 loose deadlines first, 4 tight last.
+
+    With batch_size=1 and a fixed 10ms service unit, FIFO serves in arrival
+    order and completes the tight quartet at 50-80ms — mostly past their
+    55ms deadline — while EDF pulls them to the front (the first dispatch
+    happens before they arrive, so they complete 2nd-5th) and misses none.
+    """
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(8):
+        t = i * 1e-4
+        deadline = 0.2 if i < 4 else 0.055
+        reqs.append(serve.Request(
+            rid=i, t_arrive_s=t, deadline_s=t + deadline,
+            idx=rng.integers(0, 64, (cfg.num_tables, cfg.pooling),
+                             dtype=np.int32),
+            dense=np.zeros(cfg.num_dense, dtype=np.float32),
+        ))
+    return reqs
+
+
+def test_edf_strictly_reduces_deadline_misses(served):
+    cfg = served[0]
+    reqs = _crafted_deadline_trace(cfg)
+    misses = {}
+    for order in ("fifo", "edf"):
+        fe = _frontend(served, batch_size=1, queue_order=order)
+        rep = fe.run(reqs)
+        st = rep["requests"]
+        assert st["unaccounted"] == 0
+        assert st["served"] + st["deadline_missed"] == 8
+        misses[order] = st["deadline_missed"]
+    assert misses["edf"] == 0, "EDF must serve the tight quartet in time"
+    assert misses["fifo"] >= 3, "FIFO must pay for arrival-order service"
+    assert misses["edf"] < misses["fifo"]
